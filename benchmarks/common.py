@@ -1,0 +1,40 @@
+"""Benchmark harness utilities.
+
+CPU-host caveat: wall-clock here measures the *relative* overheads the paper
+reports (FT time / total time); absolute TPU-scale performance lives in the
+roofline analysis (benchmarks/roofline.py over experiments/dryrun)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median seconds per call of a jitted fn (blocks on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(rows: list[dict], header: str):
+    """Print ``name,us_per_call,derived`` CSV rows."""
+    print(f"# {header}")
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r.get('us', ''):.1f},{r.get('derived', '')}")
+    print(flush=True)
+
+
+def qkv(b, h, hkv, s, d, dtype, seed=0):
+    import jax.numpy as jnp
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (b, h, s, d), dtype),
+            jax.random.normal(ks[1], (b, hkv, s, d), dtype),
+            jax.random.normal(ks[2], (b, hkv, s, d), dtype))

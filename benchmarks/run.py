@@ -1,0 +1,46 @@
+"""Benchmark entrypoint: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run           # all
+  PYTHONPATH=src python -m benchmarks.run fig09 ... # subset
+"""
+import sys
+import traceback
+
+from benchmarks import (bench_fig09_decoupled_vs_efta,
+                        bench_fig10_overhead_breakdown,
+                        bench_fig11_abft_variants,
+                        bench_fig12_error_coverage,
+                        bench_fig13_snvr_vs_dmr,
+                        bench_fig14_snvr_distribution,
+                        bench_tab12_unified_verification,
+                        bench_fig15_model_overhead,
+                        roofline)
+
+ALL = {
+    "fig09": bench_fig09_decoupled_vs_efta.run,
+    "fig10": bench_fig10_overhead_breakdown.run,
+    "fig11": bench_fig11_abft_variants.run,
+    "fig12": bench_fig12_error_coverage.run,
+    "fig13": bench_fig13_snvr_vs_dmr.run,
+    "fig14": bench_fig14_snvr_distribution.run,
+    "tab12": bench_tab12_unified_verification.run,
+    "fig15": bench_fig15_model_overhead.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    failed = []
+    for n in names:
+        try:
+            ALL[n]()
+        except Exception:
+            failed.append(n)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""End-to-end serving driver (the paper's use case is inference): a small
+LM serves batched requests while soft errors strike its attention layers.
+EFTA corrects them in-kernel; the fault monitor escalates if they persist.
+
+  PYTHONPATH=src python examples/serve_fault_tolerant.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.ft_runtime import FaultRateMonitor
+from repro.models import build_model
+from repro.serve import greedy_generate
+
+cfg = get_config("gpt2-smoke")
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+
+print(f"serving {cfg.name}: {cfg.num_layers}L d={cfg.d_model} "
+      f"ft={cfg.ft.mode} (EFTA stride {cfg.ft.stride})")
+monitor = FaultRateMonitor()
+for request in range(4):
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 24)), jnp.int32)
+    out, rep = greedy_generate(model, params, prompts, steps=8)
+    status = monitor.observe(int(np.sum(np.asarray(rep.detected))))
+    print(f"request {request}: generated {out.shape[1]} tokens x "
+          f"{out.shape[0]} seqs; EFTA detected={np.asarray(rep.detected)} "
+          f"status={status}")
+
+# same batch with FT disabled vs enabled must agree (no false corrections)
+off = build_model(dataclasses.replace(
+    cfg, ft=dataclasses.replace(cfg.ft, mode="off")))
+prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+a, _ = greedy_generate(model, params, prompts, steps=6)
+b, _ = greedy_generate(off, params, prompts, steps=6)
+assert (np.asarray(a) == np.asarray(b)).all()
+print("OK: EFTA-protected decoding is bit-identical to unprotected decoding "
+      "in the fault-free case.")

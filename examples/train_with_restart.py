@@ -1,0 +1,54 @@
+"""Fault-tolerant training driver: train, snapshot asynchronously, simulate a
+node crash, resume from the latest checkpoint, verify the trajectory is
+identical (stateless data pipeline + deterministic resume).
+
+  PYTHONPATH=src python examples/train_with_restart.py
+"""
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import make_pipeline
+from repro.ft_runtime import AsyncCheckpointer, StragglerMonitor, latest_step, restore
+from repro.models import build_model
+from repro.optim import AdamW, warmup_cosine
+from repro.train import init_state, make_train_step
+
+cfg = get_config("gpt2-smoke")
+model = build_model(cfg)
+opt = AdamW(lr=warmup_cosine(5e-3, warmup=5, total=40))
+data = make_pipeline(cfg, global_batch=8, seq_len=32, seed=0)
+step_fn = jax.jit(make_train_step(model, opt))
+ckpt = AsyncCheckpointer()
+mon = StragglerMonitor()
+root = Path(tempfile.mkdtemp(prefix="efta_ckpt_"))
+
+state = init_state(model, opt, jax.random.PRNGKey(0))
+print("run A: training 20 steps, async checkpoint at step 10")
+for i in range(20):
+    mon.step_start()
+    batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+    state, metrics = step_fn(state, batch)
+    v = mon.step_end()
+    if i + 1 == 10:
+        ckpt.save_async(root / f"step_{i+1}", state, step=i + 1)
+        print(f"  step {i+1}: loss {float(metrics['loss']):.4f} "
+              f"(snapshot in flight, {v.step_time:.3f}s/step)")
+ckpt.wait()
+loss_a = float(metrics["loss"])
+
+print("simulated crash. run B: resume from latest checkpoint")
+template = init_state(model, opt, jax.random.PRNGKey(0))
+state_b, step0, _ = restore(latest_step(root), template)
+print(f"  resumed at step {step0}")
+for i in range(step0, 20):
+    batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+    state_b, metrics_b = step_fn(state_b, batch)
+loss_b = float(metrics_b["loss"])
+print(f"run A final loss {loss_a:.6f} | run B final loss {loss_b:.6f}")
+np.testing.assert_allclose(loss_a, loss_b, rtol=1e-5)
+print("OK: crash-resume reproduced the exact training trajectory.")

@@ -1,0 +1,233 @@
+"""Render EXPERIMENTS.md from the dry-run/hillclimb artifacts.
+
+  PYTHONPATH=src python experiments/render_experiments.py > EXPERIMENTS.md
+"""
+import json
+import sys
+from pathlib import Path
+
+OUT = Path("experiments/dryrun")
+
+HEADER = """# EXPERIMENTS — FT-Transformer / EFTA on TPU (multi-pod JAX)
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Container is CPU-only: wall-clock numbers are *relative* overheads at reduced
+shapes (the paper's own metric); TPU-scale performance is derived from the
+compiled HLO of the production-mesh dry-run (methodology below).
+
+## Paper-claims validation (faithful reproduction)
+
+| paper claim | our result | artifact |
+|---|---|---|
+| EFTA corrects single-bit faults in GEMM-I/EXP/rowsum/GEMM-II inside one fused attention | all 5 sites detected+corrected to numerical noise (f32), both pure-JAX and Pallas kernel | tests/test_efta.py, tests/test_kernels_pallas.py |
+| Rowmax errors cancel analytically (Case 1) | confirmed in exact arithmetic; REFUTED under masking/fp-overflow corners — shadow-rowmax guard added (beyond paper) | tests/test_efta.py::test_fault_corrected |
+| Unified verification (EFTA-o) cuts FT overhead vs per-block | confirmed: per-block output verification costs more at every seq length | benchmarks/bench_tab12_unified_verification.py |
+| EFTA beats decoupled ABFT+DMR; decoupled OOMs at 16k | confirmed: speedup at all scaled seq lengths; decoupled S+P footprint 64 GB at 16k (> A100-40GB) | benchmarks/bench_fig09* |
+| Tensor-checksum ABFT: wider interleaved checksums raise multi-error coverage | confirmed: errors in distinct fold columns corrected; stride-aliased pairs are the documented limit | tests/test_checksum.py::test_interleaved_multi_error_advantage |
+| ~92.5% coverage at high bit-error rates (not 100%) | reproduced: EXP-stage product check is underflow-blind for denormal probabilities; layered NVR clamp (beyond paper) bounds the residual | benchmarks/bench_fig12* |
+| Average FT overhead ~13.9% (A100) | on TPU-model FLOP accounting: checksum-width overhead = 2*s_kv/Bc (GEMM-I) + 2*s_out/d (GEMM-II) = 6-12% at tuned widths; wall-clock overhead on CPU host is larger (no MXU) and reported per bench | benchmarks/bench_fig10*, §Perf |
+
+Beyond-paper hardening (all opt-in-able, defaults on; see DESIGN.md §7):
+f32 single-rounding checksum encode (paper's fp16 encode forces loose 0.48
+thresholds), relative thresholds floored at checksum RMS, shadow rowsum/rowmax
+accumulators (exact correction where the paper only approximates), NVR clamp
+P<=1.
+
+## §Dry-run — multi-pod certification
+
+`launch/dryrun.py` lowers + compiles every (arch x shape x mesh) cell for the
+production meshes 16x16 (256 chips) and 2x16x16 (512 chips, `pod` axis) with
+parameter/optimizer/cache ShapeDtypeStructs (no allocation). Compile success
+certifies the sharding config (FSDP x TP x EP rules in
+distributed/sharding.py); `memory_analysis()` gives per-device bytes.
+`long_500k` cells are skipped for pure full-attention archs per the
+assignment and run for hymba/rwkv6/gemma3 (sub-quadratic).
+
+Roofline-term methodology: XLA cost_analysis counts while-loop bodies once
+(verified), so per-layer costs come from two flag-aware UNROLLED probe
+compiles (k1, k2 = k1+period) extrapolated linearly — exact for the layer-
+periodic structure of every arch; SSM per-timestep recurrences remain inside
+the loop (documented 1-5% undercount on ssm archs). Collective bytes are
+result-shape sums over all-gather/all-reduce/reduce-scatter/all-to-all/
+collective-permute ops in the partitioned HLO.
+
+NOTE on "bytes accessed": XLA charges each fusion's operands+outputs; the
+pure-JAX EFTA materializes S/P tiles at fusion boundaries that the Pallas
+fused kernel (the paper's artifact, `kernels/efta_attention.py`) keeps in
+VMEM — the §Perf "kernelized" iteration quantifies exactly this gap.
+"""
+
+PERF = """
+## §Perf — hillclimb log (hypothesis -> change -> measure -> verdict)
+
+Selection per the assignment: most collective-bound cell, worst
+memory-pressure cell, most paper-representative cell. The paper-faithful
+baseline (EFTA defaults, FSDP x TP rules) is recorded first; beyond-paper
+optimizations are tagged variants of the same cell.
+
+### Cell A — kimi-k2-1t-a32b x decode_32k x 16x16 (most collective-bound)
+
+1. **Hypothesis**: decode gathers FSDP-sharded weights every step — per
+   device per step the MoE all-gathers ~3 GB of expert weights over `data`
+   while moving only ~128 tokens; the collective term should be dominated by
+   these gathers, and an inference layout (dense weights pure-TP, experts
+   fully sharded E-over-data x ff-over-model, tokens all-gathered instead)
+   should cut collective bytes by orders of magnitude.
+   Napkin: weight-gather bytes/step ~ params_bytes/data_degree x layers-touch
+   vs token bytes ~ B x d x 2 = 1.8 MB.
+2. **Change**: `param_shardings(inference=True)` + `MoECfg.inference_ep` —
+   see distributed/sharding.py and models/moe.py::_moe_inference_ep.
+3. **Measured** (tag `infer_layout`): collective term 6.25s -> 1.05s
+   (**6.0x**), memory 4.03 -> 3.10s, compute 7.9 -> 5.3ms. The cell flips
+   from collective- to memory-dominant (now KV-cache + weight streaming —
+   the irreducible decode traffic).
+4. **Verdict**: CONFIRMED. Peak bytes stayed ~flat (buffer liveness around
+   the cache update, not the gathers) — recorded, next lever would be int8
+   KV cache. Stopping: one iteration moved the dominant term 6x; remaining
+   levers (<5% each on the new dominant term) fall under the stop rule.
+
+### Cell B — arctic-480b x train_4k x 16x16 (worst memory pressure)
+
+1. **Hypothesis (mb4)**: peak temp is dominated by whole-batch activation
+   liveness (layer-scan residuals ~16 GB at B_loc=8, plus f32 optimizer
+   temporaries over stacked leaves); 4 microbatches shrink it ~4x at equal
+   FLOPs. **Change**: `make_train_step(microbatches=4)`.
+   **Measured**: peak 152.3 -> 67.3 GB (**-56%**); compute flat (3.39 vs
+   3.40s) but memory bytes +18% and collectives +94% (FSDP weight gathers
+   repeat per microbatch — a real, known FSDP-accumulation tax).
+   **Verdict**: CONFIRMED for peak (the target), with the quantified
+   collective cost; methodology note — the microbatch loop is a while in
+   HLO, so probe costs are scaled by the accumulation factor.
+2. **Hypothesis (seqpar)**: residual memory and inter-block activation
+   traffic scale with full-S activations; Megatron sequence parallelism
+   shards them over `model` (16x smaller residuals) for all-gather/
+   reduce-scatter pairs at block boundaries. **Change**:
+   `ModelConfig.seq_parallel=True` (+mb4). **Measured**: peak 67.3 ->
+   52.4 GB (-22%) but collective term 41 -> 62s and rf 0.040 -> 0.031.
+   **Verdict**: PARTIALLY REFUTED on this MoE arch — arctic is already
+   ICI-heavy from expert gathers, so SP's comm outweighs its memory win
+   here (it remains the right lever for dense archs / larger batch).
+3. **Hypothesis (s8 vs s128)**: the "lane-aligned s=128 checksum" port of
+   the paper's MMA-layout trick is WRONG on TPU at narrow KV blocks:
+   checksum *width* sets extra MXU columns (2s/Bc on GEMM-I = +50% at
+   s=128/Bc=512), fold *layout* only touches cheap VPU adds. **Change**:
+   pin fold widths to 8 vs 128. **Measured**: compute 3.390 -> 3.598s
+   (**+6.1%** whole-model; attention is ~12% of arctic's MoE-heavy FLOPs,
+   so the attention-local penalty is ~50% as predicted). **Verdict**:
+   CONFIRMED (the naive port is refuted; widths stay auto-tuned at 6-12%
+   MXU overhead with >= 2x the paper's multi-error spacing).
+
+### Cell C — deepseek-coder-33b x prefill_32k x 16x16 (paper-representative)
+
+1. **Hypothesis (kernelized)**: the XLA-compiled (unfused) EFTA pays HBM
+   round-trips for every S/P tile between matmul/exp/mask ops — the exact
+   traffic the paper's fused kernel eliminates. Summing the S/P-tile-shaped
+   op results in the probe HLO measures that traffic; subtracting it models
+   the Pallas-kernel deployment (kernels/efta_attention.py, validated in
+   interpret mode) and should move the cell from memory-bound toward
+   compute-bound.
+2. **Change**: deploy `kernels/efta_attention.py` for the attention layer
+   (accounting via HLO tile-byte measurement; the kernel itself is the
+   artifact).
+3. **Measured** (tag `kernelized`): S/P-tile HBM traffic in the unfused
+   HLO = **23.4 TB/device/step**; removing it cuts the memory term
+   5.32e+01s -> 2.46e+01s (**2.2x**). Compute term 3.0s.
+4. **Verdict**: CONFIRMED and conservative — the accounting subtracts only
+   S/P-tile-shaped transfers; the fused kernel also keeps the (B,H,Sq,D)
+   output accumulator in VMEM across KV steps (~1 TB more). The cell stays
+   memory-bound after fusion: remaining bytes are KV streaming + carry
+   traffic, pointing at block_q retuning as the next (sub-5%-per-step)
+   lever — stop rule reached.
+
+### Hillclimb result table (tagged artifacts in experiments/dryrun)
+"""
+
+
+def fmt_row(r):
+    t = r.get("roofline")
+    if t is None:
+        return (f"| {r['arch']} | {r['shape']} | {r.get('tag','')} | "
+                f"{r['compute_s']:.2e} | {r['memory_s_fused']:.2e} | - | - | "
+                f"(memory term after fusing: baseline {r['memory_s_baseline']:.2e}) |")
+    rf = r.get("roofline_fraction")
+    return (f"| {r['arch']} | {r['shape']} | {r.get('tag','') or 'baseline'} "
+            f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+            f"| {t['collective_s']:.2e} | {r['memory']['peak_bytes']/1e9:.1f} "
+            f"| rf={rf and round(rf, 4)} dom={r['dominant'][:-2]} |")
+
+
+def main():
+    rows = [json.loads(p.read_text()) for p in sorted(OUT.glob("*.json"))]
+    base = [r for r in rows if not r.get("tag")]
+    tagged = [r for r in rows if r.get("tag")]
+
+    print(HEADER)
+    for mesh in ("16x16", "2x16x16"):
+        sel = [r for r in base if r["mesh"] == mesh]
+        print(f"\n### Dry-run + §Roofline — mesh {mesh} "
+              f"({'512' if mesh != '16x16' else '256'} chips)\n")
+        print("| arch | shape | kind | compute_s | memory_s | collective_s "
+              "| dominant | peak GB | fits 16GB | useful-FLOPs ratio "
+              "| roofline fraction |")
+        print("|---|---|---|---|---|---|---|---|---|---|---|")
+        for r in sorted(sel, key=lambda r: (r["arch"], r["shape"])):
+            t = r["roofline"]
+            print(f"| {r['arch']} | {r['shape']} | {r['kind']} "
+                  f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+                  f"| {t['collective_s']:.2e} | {r['dominant'][:-2]} "
+                  f"| {r['memory']['peak_bytes']/1e9:.1f} "
+                  f"| {r['memory']['fits_16gb']} "
+                  f"| {r['useful_flops_ratio'] and round(r['useful_flops_ratio'],3)} "
+                  f"| {r['roofline_fraction'] and round(r['roofline_fraction'],4)} |")
+
+    print("""
+Reading the table: *dominant* is the roofline bottleneck per cell; *useful-
+FLOPs ratio* = MODEL_FLOPS(6ND / 6N_active*D) / compiled HLO FLOPs (remat
+recompute, attention quadratic terms, checksum overhead and head-padding
+waste all lower it); *roofline fraction* = ideal model-FLOPs time / dominant
+term (the score a perfect overlap schedule could reach). Decode cells are
+inherently bandwidth-bound (rf ~ 0 is expected: one token per sequence).
+One-line lever per dominant term: compute -> causal block skipping + narrower
+checksums + less remat; memory -> Pallas-fused attention (S/P in VMEM),
+sequence parallelism, microbatching; collective -> inference weight layouts,
+int8 gradient sync, overlap via latency-hiding scheduler.
+
+Per-device HBM notes: cells with fits=False at 16x16 record the finding that
+the arch x shape needs the 512-chip mesh (or the §Perf changes): the 2x16x16
+column shows the same cell at half the per-device footprint. kimi/arctic
+train peaks are dominated by f32 optimizer temporaries + layer-scan
+residuals — mb4/seqpar address exactly these (see §Perf).""")
+
+    print(PERF)
+    print("| arch | shape | variant | compute_s | memory_s | collective_s "
+          "| peak GB | note |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(base, key=lambda r: r["arch"]):
+        if (r["arch"], r["shape"], r["mesh"]) in {
+            ("kimi-k2-1t-a32b", "decode_32k", "16x16"),
+            ("arctic-480b", "train_4k", "16x16"),
+            ("deepseek-coder-33b", "prefill_32k", "16x16")}:
+            print(fmt_row(r))
+    for r in sorted(tagged, key=lambda r: (r["arch"], r.get("tag", ""))):
+        print(fmt_row(r))
+
+    print("""
+### Perf summary (the score)
+
+Best roofline fractions reached (ideal-model-FLOPs time / dominant term):
+train cells peak at **0.079** (starcoder2/deepseek train_4k baseline) under
+the pure-JAX attention path; §Perf cell C shows kernel fusion alone doubles
+the achievable fraction on attention-heavy cells (memory term 2.2x down),
+and cell A shows the decode serving path gains 6x on its dominant
+(collective) term from the inference layout. Decode cells sit at rf ~ 0 by
+construction (one token per sequence against streamed weights/KV — the
+correct lever there is batching, quantized KV, and the measured layout fix,
+not FLOPs). The useful-FLOPs ratio column isolates where compiled compute
+exceeds 6ND: full-layer remat (+~33% on train), causal masking computed as
+full blocks (up to 2x on attention scores), GQA head padding (56->64 = +14%
+on arctic/deepseek attention), and the 6-12% checksum width — each a
+recorded, bounded engineering trade with its lever noted above.""")
+
+
+if __name__ == "__main__":
+    main()

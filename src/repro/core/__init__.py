@@ -1,0 +1,17 @@
+"""Core EFTA library — the paper's contribution as composable JAX modules."""
+from repro.core.checksum import (
+    Checksums,
+    PAPER_STRIDE,
+    TPU_STRIDE,
+    encode_cols,
+    encode_kv,
+    fold1,
+    fold2,
+    foldprod,
+    verify_and_correct,
+    verify_product,
+)
+from repro.core.efta import EFTAConfig, FTReport, efta_attention, efta_mha, reference_attention
+from repro.core.decoupled import decoupled_ft_attention, decoupled_memory_bytes
+from repro.core.abft_gemm import abft_matmul, tensor_abft_matmul
+from repro.core.fault import FaultSpec, Site, inject, random_fault

@@ -1,0 +1,61 @@
+"""ABFT-protected linear layers (feed-forward / projections).
+
+The paper (§4.1) notes the tensor-checksum encoding "can be extended to
+mixed-precision linear operations in the feed-forward layers" — this module is
+that extension. Two variants:
+
+  * ``abft_matmul``         — classic rank-1 ABFT (baseline, Fig. 11 purple)
+  * ``tensor_abft_matmul``  — strided tensor-checksum ABFT (Fig. 11 orange),
+                              fold stride matched to the TPU lane tile
+
+Both protect ``y = x @ w`` where errors are injected into ``y``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import checksum as cks
+from repro.core.fault import FaultSpec, Site, inject
+
+
+def _threshold_for(dtype, override: Optional[float]) -> float:
+    # relative to checksum magnitude (see checksum.verify_and_correct)
+    if override is not None:
+        return override
+    return 1e-3 if jnp.dtype(dtype) == jnp.float32 else 5e-2
+
+
+def abft_matmul(x, w, *, correct: bool = True, threshold: Optional[float] = None,
+                fault: Optional[FaultSpec] = None):
+    """y = x @ w with classic rank-1 row-checksum ABFT. x: (..., M, K), w: (K, N)."""
+    wc = cks.traditional_encode_cols(w)               # (K, 2)
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    y = inject(y, fault, Site.GEMM1, 0)
+    y_checks = jnp.matmul(x, wc, preferred_element_type=jnp.float32)
+    verdict = cks.traditional_verify_correct(
+        y, y_checks, threshold=_threshold_for(x.dtype, threshold), correct=correct)
+    return verdict.corrected.astype(x.dtype), verdict.n_detected
+
+
+def tensor_abft_matmul(x, w, *, stride: int = cks.TPU_STRIDE, correct: bool = True,
+                       threshold: Optional[float] = None,
+                       fault: Optional[FaultSpec] = None):
+    """y = x @ w with strided tensor-checksum ABFT (paper §4.1, TPU layout).
+
+    The checksum folds the output feature axis with stride ``s``; encode and
+    verify are whole-vreg adds when ``s % 128 == 0``.
+    """
+    n = w.shape[-1]
+    s = min(stride, max(n // 2, 4))
+    wc = cks.encode_cols(w, s)                        # (K, s) x2
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    y = inject(y, fault, Site.GEMM1, 0)
+    c1 = jnp.matmul(x, wc.c1, preferred_element_type=jnp.float32)
+    c2 = jnp.matmul(x, wc.c2, preferred_element_type=jnp.float32)
+    verdict = cks.verify_and_correct(
+        y, cks.Checksums(c1, c2), s,
+        threshold=_threshold_for(x.dtype, threshold), correct=correct)
+    return verdict.corrected.astype(x.dtype), verdict.n_detected

@@ -1,0 +1,233 @@
+"""Tensor-checksum algebra (paper §4.1, adapted to TPU tile layout).
+
+The paper's tensor checksum folds a matrix along one dimension with a fixed
+stride ``s`` chosen to match the compute unit's native data layout, so that
+encode / verify / correct are *local* accumulations:
+
+  * A100 (paper): ``s = 8`` matches the ``SM80_16x8x16`` MMA atom N-dim — each
+    CUDA thread folds only its own registers.
+  * TPU (this repo): ``s = 128`` matches the VREG lane tile — folding
+    ``(Br, Bc) -> (Br, Bc//s, s) -> sum(axis=1)`` is a sum of whole vregs with
+    zero cross-lane shuffles. ``s = 8`` remains available for paper-fidelity
+    experiments (``paper_stride``).
+
+Given a fold with ``g = width // s`` segments:
+
+  ``fold1(X)[i, j] = sum_l X[i, j + s*l]``              (weights r1 = 1)
+  ``fold2(X)[i, j] = sum_l (l+1) * X[i, j + s*l]``      (weights r2 = l+1)
+
+The key ABFT identity: for ``S = Q @ K^T``,
+``fold1(S) = Q @ fold1_rows(K^T) = Q @ encode_checksum1(K)^T`` — so checksums
+of the *inputs* predict folds of the *output*, and a mismatch between the
+predicted fold (``S_check``) and the recomputed fold (``S_sum``) localizes and
+corrects single errors per (row, fold column) at stride ``s``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PAPER_STRIDE = 8     # SM80 MMA atom N-dim (paper fidelity)
+TPU_STRIDE = 128     # TPU VREG lane tile (architecture-aware default here)
+
+
+def _check_fold(width: int, stride: int) -> int:
+    if width % stride != 0:
+        raise ValueError(f"fold width {width} not divisible by stride {stride}")
+    return width // stride
+
+
+def fold1(x: jax.Array, stride: int) -> jax.Array:
+    """Unweighted strided fold along the last dim: (..., W) -> (..., stride)."""
+    g = _check_fold(x.shape[-1], stride)
+    return x.reshape(*x.shape[:-1], g, stride).sum(axis=-2)
+
+
+def fold2(x: jax.Array, stride: int) -> jax.Array:
+    """Index-weighted strided fold along the last dim (weights l+1)."""
+    g = _check_fold(x.shape[-1], stride)
+    w = jnp.arange(1, g + 1, dtype=x.dtype)
+    return (x.reshape(*x.shape[:-1], g, stride) * w[:, None]).sum(axis=-2)
+
+
+def foldprod(x: jax.Array, stride: int) -> jax.Array:
+    """Strided product fold along the last dim — used for the EXP identity
+    ``exp(fold1(S) - g*m) == prod_l exp(S[..., j+s*l] - m)`` (paper Alg.1 l.13)."""
+    g = _check_fold(x.shape[-1], stride)
+    return x.reshape(*x.shape[:-1], g, stride).prod(axis=-2)
+
+
+class Checksums(NamedTuple):
+    """Pair of fold checksums (unweighted, index-weighted) of one operand."""
+
+    c1: jax.Array
+    c2: jax.Array
+
+
+def encode_kv(x: jax.Array, stride: int) -> Checksums:
+    """Encode checksums of a K or V block along its *sequence/feature* axis.
+
+    For ``K`` of shape (..., Bc, d) folded along ``Bc`` (axis -2): returns
+    checksums of shape (..., stride, d) such that
+    ``Q @ c1.T == fold1(Q @ K^T)`` along the Bc axis.
+
+    Folds accumulate in f32 and are rounded ONCE to the storage dtype: the
+    paper's in-precision (fp16) encode accumulates rounding into the checksum
+    and forces loose thresholds (their 0.48); a single rounding leaves
+    ~2^-8 relative error and lets thresholds tighten 2-10x.
+    """
+    g = _check_fold(x.shape[-2], stride)
+    xr = x.astype(jnp.float32).reshape(*x.shape[:-2], g, stride, x.shape[-1])
+    c1 = xr.sum(axis=-3)
+    w = jnp.arange(1, g + 1, dtype=jnp.float32)
+    c2 = (xr * w[:, None, None]).sum(axis=-3)
+    return Checksums(c1.astype(x.dtype), c2.astype(x.dtype))
+
+
+def encode_cols(x: jax.Array, stride: int) -> Checksums:
+    """Encode checksums of V along its *feature* axis (last dim).
+
+    For ``V`` of shape (..., Bc, d) folded along ``d``: returns (..., Bc, stride)
+    such that ``P @ c1 == fold1(P @ V)`` along the d axis. f32 accumulation,
+    single rounding (see encode_kv).
+    """
+    xf = x.astype(jnp.float32)
+    return Checksums(fold1(xf, stride).astype(x.dtype),
+                     fold2(xf, stride).astype(x.dtype))
+
+
+class Verdict(NamedTuple):
+    """Outcome of a checksum verification over one tensor."""
+
+    corrected: jax.Array   # the (possibly) corrected tensor
+    n_detected: jax.Array  # int32 scalar: # of (row, fold-col) mismatches
+    max_delta: jax.Array   # f32 scalar: largest |checksum - recomputed fold|
+
+
+def verify_and_correct(
+    x: jax.Array,
+    checks: Checksums,
+    stride: int,
+    *,
+    threshold: float,
+    correct: bool = True,
+) -> Verdict:
+    """Detect + locate + correct single errors per (row, fold column).
+
+    ``x``: (..., W); ``checks.c1/c2``: predicted folds of shape (..., stride).
+    An error at ``x[..., j + s*l]`` of magnitude ``delta`` shows up as
+    ``c1 - fold1 = -delta`` at fold column j and ``(c2 - fold2)/(c1 - fold1)
+    = l+1`` locates the segment. Correction adds ``delta`` back (paper §4.1).
+    """
+    g = _check_fold(x.shape[-1], stride)
+    xf = x.astype(jnp.float32)
+    sum1 = fold1(xf, stride)
+    sum2 = fold2(xf, stride)
+    d1 = checks.c1.astype(jnp.float32) - sum1
+    d2 = checks.c2.astype(jnp.float32) - sum2
+    # threshold is relative to the checksum magnitude, floored at the tensor's
+    # mean |c1|: verify-side rounding scales with the *contraction* magnitude
+    # even where an individual checksum lands near zero, so a unit floor
+    # false-positives and an absolute threshold can't fit all fold widths.
+    c1f = jnp.abs(checks.c1.astype(jnp.float32))
+    floor = jnp.maximum(jnp.mean(c1f), 1e-6)
+    bad = jnp.abs(d1) > threshold * jnp.maximum(c1f, floor)
+    n_detected = bad.sum(dtype=jnp.int32)
+    max_delta = jnp.max(jnp.abs(d1)) if d1.size else jnp.float32(0)
+    if not correct:
+        return Verdict(x, n_detected, max_delta)
+    # Locate segment index l* = round(d2/d1) - 1, clamped to [0, g-1].
+    safe_d1 = jnp.where(bad, d1, 1.0)
+    l_star = jnp.clip(jnp.round(d2 / safe_d1) - 1, 0, g - 1).astype(jnp.int32)
+    seg = jnp.arange(g, dtype=jnp.int32)
+    # one-hot over segments, broadcast over fold columns: (..., g, stride)
+    onehot = (seg[:, None] == l_star[..., None, :]).astype(jnp.float32)
+    patch = onehot * (d1 * bad)[..., None, :]
+    fixed = xf.reshape(*xf.shape[:-1], g, stride) + patch
+    fixed = fixed.reshape(x.shape).astype(x.dtype)
+    return Verdict(fixed, n_detected, max_delta)
+
+
+def verify_product(
+    p: jax.Array,
+    p_check1: jax.Array,
+    stride: int,
+    *,
+    threshold: float,
+) -> tuple[jax.Array, jax.Array]:
+    """EXP-stage verification (paper Alg.1 line 13): compare the strided
+    *product* of ``P = exp(S - m)`` against ``exp(S_check1 - g*m)``.
+
+    The comparison is *relative* (products span many orders of magnitude);
+    mismatches below ``threshold * |check|`` or in the denormal floor are
+    ignored — such errors correspond to negligible attention probabilities.
+
+    Returns (bad bool (..., stride) per fold column, n_detected).
+    """
+    floor = 1e-20
+    prod = foldprod(p.astype(jnp.float32), stride)
+    ref = jnp.maximum(jnp.abs(p_check1.astype(jnp.float32)), floor)
+    bad = jnp.abs(prod - p_check1.astype(jnp.float32)) > threshold * ref + floor
+    return bad, bad.sum(dtype=jnp.int32)
+
+
+# --- traditional (rank-1) ABFT, used by the decoupled baseline -------------
+
+
+def traditional_encode_rows(a: jax.Array) -> jax.Array:
+    """Classic ABFT column checksums: append [1-weighted; index-weighted] rows.
+
+    a: (..., M, K) -> (..., 2, K) with c1 = ones @ A, c2 = (1..M) @ A.
+    f32 accumulation, single rounding (see encode_kv).
+    """
+    af = a.astype(jnp.float32)
+    m = a.shape[-2]
+    w = jnp.arange(1, m + 1, dtype=jnp.float32)
+    c1 = af.sum(axis=-2, keepdims=True)
+    c2 = (af * w[..., :, None]).sum(axis=-2, keepdims=True)
+    return jnp.concatenate([c1, c2], axis=-2).astype(a.dtype)
+
+
+def traditional_encode_cols(b: jax.Array) -> jax.Array:
+    """Classic ABFT row checksums: append [B@1, B@(1..N)] columns."""
+    bf = b.astype(jnp.float32)
+    n = b.shape[-1]
+    w = jnp.arange(1, n + 1, dtype=jnp.float32)
+    r1 = bf.sum(axis=-1, keepdims=True)
+    r2 = (bf * w).sum(axis=-1, keepdims=True)
+    return jnp.concatenate([r1, r2], axis=-1).astype(b.dtype)
+
+
+def traditional_verify_correct(
+    c: jax.Array,
+    row_checks: jax.Array,
+    *,
+    threshold: float,
+    correct: bool = True,
+) -> Verdict:
+    """Verify/correct ``C`` against classic row checksums (C @ [1, w]).
+
+    row_checks: (..., M, 2) — predicted [sum, weighted-sum] per row.
+    Single-error model: a bad row is located to a column by the weighted ratio.
+    """
+    n = c.shape[-1]
+    cf = c.astype(jnp.float32)
+    w = jnp.arange(1, n + 1, dtype=jnp.float32)
+    s1 = cf.sum(axis=-1)
+    s2 = (cf * w).sum(axis=-1)
+    d1 = row_checks[..., 0].astype(jnp.float32) - s1
+    d2 = row_checks[..., 1].astype(jnp.float32) - s2
+    c1f = jnp.abs(row_checks[..., 0].astype(jnp.float32))
+    floor = jnp.maximum(jnp.mean(c1f), 1e-6)
+    bad = jnp.abs(d1) > threshold * jnp.maximum(c1f, floor)
+    n_detected = bad.sum(dtype=jnp.int32)
+    max_delta = jnp.max(jnp.abs(d1)) if d1.size else jnp.float32(0)
+    if not correct:
+        return Verdict(c, n_detected, max_delta)
+    safe_d1 = jnp.where(bad, d1, 1.0)
+    col = jnp.clip(jnp.round(d2 / safe_d1) - 1, 0, n - 1).astype(jnp.int32)
+    onehot = (jnp.arange(n, dtype=jnp.int32) == col[..., None]).astype(jnp.float32)
+    fixed = cf + onehot * (d1 * bad)[..., None]
+    return Verdict(fixed.astype(c.dtype), n_detected, max_delta)

@@ -1,0 +1,122 @@
+"""Decoupled fault-tolerant attention — the paper's baseline (§3.1, Figs 2-3).
+
+Three *separate* kernels, each a distinct jitted executable so the CPU analog
+of "kernel launch + HBM round trip" is honest:
+
+  kernel I   : ABFT-GEMM  S = Q·Kᵀ   (classic rank-1 checksums, S materialized)
+  kernel II  : DMR row-softmax        (redundant re-execution + comparison)
+  kernel III : ABFT-GEMM  O = P·V    (classic rank-1 checksums, P materialized)
+
+The O(n²) S and P tensors round-trip through host/HBM between kernels — this
+is exactly the memory blowup the paper's Fig. 9 shows OOMing at 16k tokens.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import checksum as cks
+from repro.core.efta import MASK_VALUE, FTReport, _full_mask
+from repro.core.fault import FaultSpec, Site, inject
+
+
+@functools.partial(jax.jit, static_argnames=("correct",))
+def abft_gemm_qk(q, k, *, correct: bool = True, fault=None):
+    """Kernel I: S = Q Kᵀ with traditional rank-1 ABFT (paper eq. 9-10).
+
+    ``fault`` (Site.GEMM1) is injected between compute and verification —
+    inside the kernel, as in the paper's model."""
+    d = q.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    # Row checksums of S predicted from K's column checksums: S @ [1, w].
+    k_t = jnp.swapaxes(k, -1, -2)                     # (B,H,D,Skv)
+    kc = cks.traditional_encode_cols(k_t)             # (B,H,D,2)
+    s = jnp.einsum("bhqd,bhdc->bhqc", q, k_t,
+                   preferred_element_type=jnp.float32) * scale
+    s = inject(s, fault, Site.GEMM1, 0)
+    s_checks = jnp.einsum("bhqd,bhdc->bhqc", q, kc,
+                          preferred_element_type=jnp.float32) * scale
+    verdict = cks.traditional_verify_correct(
+        s, s_checks, threshold=5e-2 if q.dtype != jnp.float32 else 1e-3,
+        correct=correct)
+    return verdict.corrected, verdict.n_detected
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def dmr_row_softmax(s, *, causal: bool = False):
+    """Kernel II: row softmax with dual modular redundancy (paper eq. 11-12).
+
+    The softmax is executed twice; results must agree within tolerance and
+    each row of P must sum to ~1 (the c1 invariant). Disagreement triggers a
+    third (tie-break) execution — here the recomputation is the correction.
+    """
+    if causal:
+        sq, skv = s.shape[-2], s.shape[-1]
+        m = _full_mask(sq, skv, causal=True, window=None, kv_len=None, q_offset=skv - sq)
+        s = jnp.where(m, s, MASK_VALUE)
+    p1 = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    # the optimization barrier defeats CSE so the redundant execution is
+    # real (software DMR under an optimizing compiler is otherwise vacuous)
+    p2 = jax.nn.softmax(jax.lax.optimization_barrier(s.astype(jnp.float32)),
+                        axis=-1)
+    agree = jnp.abs(p1 - p2) < 1e-6
+    rowsum_ok = jnp.abs(p1.sum(-1) - 1.0) < 1e-3
+    n_detected = (~agree).sum(dtype=jnp.int32) + (~rowsum_ok).sum(dtype=jnp.int32)
+    p = jnp.where(agree, (p1 + p2) * 0.5, p1)
+    return p.astype(s.dtype), n_detected
+
+
+@functools.partial(jax.jit, static_argnames=("correct",))
+def abft_gemm_pv(p, v, *, correct: bool = True, fault=None):
+    """Kernel III: O = P V with traditional rank-1 ABFT (row-tiled variant)."""
+    vc = cks.traditional_encode_cols(v)               # (B,H,Skv,2)
+    o = jnp.einsum("bhqc,bhcd->bhqd", p, v,
+                   preferred_element_type=jnp.float32)
+    o = inject(o, fault, Site.GEMM2, 0)
+    o_checks = jnp.einsum("bhqc,bhcd->bhqd", p, vc,
+                          preferred_element_type=jnp.float32)
+    verdict = cks.traditional_verify_correct(
+        o, o_checks, threshold=5e-2 if p.dtype != jnp.float32 else 1e-3,
+        correct=correct)
+    return verdict.corrected.astype(p.dtype), verdict.n_detected
+
+
+def decoupled_ft_attention(q, k, v, *, causal: bool = False,
+                           fault: Optional[FaultSpec] = None,
+                           correct: bool = True):
+    """Full decoupled pipeline: 3 kernels, S and P materialized in HBM.
+
+    GQA is handled by repeating KV heads (the decoupled baseline predates GQA
+    kernels — repetition is what a naive integration does, and it charges the
+    honest memory bill).
+    """
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=1)
+        v = jnp.repeat(v, h // hkv, axis=1)
+    # Faults at GEMM sites are injected *inside* the owning kernel (caught by
+    # that kernel's ABFT). A Site.EXP fault is injected into P *between*
+    # kernels II and III — the decoupled framework's inter-kernel memory gap
+    # (the fused EFTA has no such boundary; see Fig. 9 benches).
+    s, n1 = abft_gemm_qk(q, k, correct=correct, fault=fault)
+    jax.block_until_ready(s)  # kernel boundary: S round-trips through HBM
+    p, n2 = dmr_row_softmax(s, causal=causal)
+    p = inject(p, fault, Site.EXP, 0)
+    jax.block_until_ready(p)  # kernel boundary: P round-trips through HBM
+    p = p.astype(q.dtype)
+    o, n3 = abft_gemm_pv(p, v, correct=correct, fault=fault)
+    detected = jnp.stack([n1, n2, jnp.int32(0), jnp.int32(0), n3])
+    rep = FTReport(detected, detected if correct else detected * 0,
+                   jnp.zeros((3,), jnp.float32))
+    return o.astype(q.dtype), rep
+
+
+def decoupled_memory_bytes(b, h, sq, skv, dtype=jnp.bfloat16) -> int:
+    """Analytic HBM footprint of the intermediates (S and P) the decoupled
+    framework materializes — the quantity that OOMs at 16k in paper Fig. 9."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return 2 * b * h * sq * skv * itemsize

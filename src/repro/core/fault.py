@@ -1,0 +1,130 @@
+"""Soft-error (single-event-upset) injection via bit flips.
+
+The paper's error model is a single bit flip per protected region (SEU
+assumption, §4.2). There is no faulty hardware in CI, so faults are *injected*
+at named sites inside the attention pipeline and the framework must detect and
+correct them. Sites mirror the paper's Cases:
+
+  GEMM1    — after the Q·Kᵀ accumulate (Case: ABFT on GEMM I)
+  ROWMAX   — in the running row max (Case 1: cancels analytically)
+  EXP      — after exp(S - m)        (Case 2: checksum-reuse + recompute)
+  ROWSUM   — in the running row sum  (Case 3: SNVR range restriction)
+  GEMM2    — after the P·V accumulate (ABFT on GEMM II, unified verification)
+  WEIGHTS  — in model weights (memory fault; used by model-level benches)
+"""
+from __future__ import annotations
+
+import enum
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Site(enum.IntEnum):
+    NONE = -1
+    GEMM1 = 0
+    ROWMAX = 1
+    EXP = 2
+    ROWSUM = 3
+    GEMM2 = 4
+    WEIGHTS = 5
+
+
+class FaultSpec(NamedTuple):
+    """A (batch of) injected single-bit faults. All fields are int32 arrays of
+    shape (n_faults,). ``site == Site.NONE`` disables an entry. ``block`` is
+    the KV-block iteration index at which the flip occurs (-1 = every block's
+    first touch? no — -1 matches block 0)."""
+
+    site: jax.Array
+    block: jax.Array
+    batch: jax.Array
+    head: jax.Array
+    row: jax.Array
+    col: jax.Array
+    bit: jax.Array
+
+    @staticmethod
+    def none(n: int = 1) -> "FaultSpec":
+        z = jnp.full((n,), -1, dtype=jnp.int32)
+        return FaultSpec(z, z * 0, z * 0, z * 0, z * 0, z * 0, z * 0)
+
+    @staticmethod
+    def single(site: Site, *, block: int = 0, batch: int = 0, head: int = 0,
+               row: int = 0, col: int = 0, bit: int = 20) -> "FaultSpec":
+        def a(v):
+            return jnp.asarray([v], dtype=jnp.int32)
+        return FaultSpec(a(int(site)), a(block), a(batch), a(head), a(row), a(col), a(bit))
+
+
+def _uint_dtype(dtype) -> jnp.dtype:
+    return {2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}[jnp.dtype(dtype).itemsize]
+
+
+def flip_bit_at(x: jax.Array, flat_index: jax.Array, bit: jax.Array) -> jax.Array:
+    """Flip one bit of the element at ``flat_index`` of ``x`` (any float dtype)."""
+    ui = _uint_dtype(x.dtype)
+    nbits = jnp.dtype(ui).itemsize * 8
+    bit = jnp.clip(bit, 0, nbits - 1).astype(ui)
+    flat = jax.lax.bitcast_convert_type(x.reshape(-1), ui)
+    cur = flat[flat_index]
+    flat = flat.at[flat_index].set(cur ^ (ui(1) << bit))
+    return jax.lax.bitcast_convert_type(flat, x.dtype).reshape(x.shape)
+
+
+def inject(x: jax.Array, fault: FaultSpec | None, site: Site,
+           block_index: jax.Array | int = 0) -> jax.Array:
+    """Apply every matching fault in ``fault`` to tensor ``x``.
+
+    ``x`` is indexed as (batch, head, row[, col]); vector sites (ROWMAX/ROWSUM)
+    ignore ``col``. Out-of-range coordinates are clamped (still a valid SEU).
+    """
+    if fault is None:
+        return x
+    n = fault.site.shape[0]
+    block_index = jnp.asarray(block_index, dtype=jnp.int32)
+    for i in range(n):  # n is small & static — unrolled
+        match = (fault.site[i] == int(site)) & (fault.block[i] == block_index)
+        x = jax.lax.cond(match, lambda t: _flip_one(t, fault, i), lambda t: t, x)
+    return x
+
+
+def _flip_one(x: jax.Array, fault: FaultSpec, i: int) -> jax.Array:
+    shape = x.shape
+    # Clamp coordinates into range.
+    idx = []
+    coords = [fault.batch[i], fault.head[i], fault.row[i], fault.col[i]]
+    for dim, c in zip(shape, coords):
+        idx.append(jnp.clip(c, 0, dim - 1).astype(jnp.int32))
+    # Build the flat index for the leading len(idx) dims.
+    flat = jnp.int32(0)
+    stride = 1
+    for dim in shape[len(idx):]:
+        stride *= dim
+    strides = []
+    s = stride
+    for dim in reversed(shape[: len(idx)]):
+        strides.append(s)
+        s *= dim
+    strides = list(reversed(strides))
+    for c, st in zip(idx, strides):
+        flat = flat + c * jnp.int32(st)
+    return flip_bit_at(x, flat, fault.bit[i])
+
+
+def random_fault(rng: np.random.Generator, *, sites, shape_bhsc, n_blocks: int,
+                 max_bit: int = 31) -> FaultSpec:
+    """Sample a uniform random single fault (host-side, for campaigns)."""
+    b, h, s, c = shape_bhsc
+    site = int(rng.choice([int(x) for x in sites]))
+    return FaultSpec.single(
+        Site(site),
+        block=int(rng.integers(0, max(n_blocks, 1))),
+        batch=int(rng.integers(0, b)),
+        head=int(rng.integers(0, h)),
+        row=int(rng.integers(0, s)),
+        col=int(rng.integers(0, c)),
+        bit=int(rng.integers(0, max_bit + 1)),
+    )

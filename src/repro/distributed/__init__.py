@@ -1,0 +1,5 @@
+from repro.distributed.sharding import (batch_sharding, cache_shardings,
+                                        dp_axes, param_shardings,
+                                        spec_for_param)
+from repro.distributed.collectives import compressed_psum, quantize_int8
+from repro.distributed.context import DistContext, current, use_context

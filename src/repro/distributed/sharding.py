@@ -1,0 +1,168 @@
+"""Logical-axis sharding rules (FSDP x TP x EP), MaxText-style but by name.
+
+Parameters are sharded over BOTH the ``data`` axis (FSDP/ZeRO-3 storage — the
+1T-class MoE archs do not fit otherwise) and the ``model`` axis (tensor /
+expert parallel). GSPMD inserts the just-in-time all-gathers for dense
+layers; the MoE layer gathers explicitly inside its shard_map.
+
+Rules are matched on parameter-path suffixes; stacked-scan leading layer dims
+are padded with None automatically.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# name-pattern -> spec for the *trailing* dims of the parameter
+_RULES: list[tuple[str, tuple]] = [
+    # vocab-parallel embedding (Megatron-style): GSPMD emits masked-gather +
+    # all-reduce for the lookup. Double-sharding (model,data) triggers XLA's
+    # "involuntary full rematerialization" slow path on the 3-axis mesh.
+    (r"(embed|lm_head)/table$", ("model", None)),
+    (r"pos/pos$", (None, None)),
+    # attention / dense projections: column-parallel in, row-parallel out
+    (r"(wq|wk|wv)$", ("data", "model")),
+    (r"wo$", ("model", "data")),
+    (r"(gate|up)$", ("data", "model")),
+    (r"down$", ("model", "data")),
+    # MoE experts: E over model, dim-1 over data (FSDP); router replicated
+    (r"moe/(wg|wu|wd)$", ("model", "data", None)),
+    (r"moe/router$", (None, None)),
+    # SSM projections
+    (r"(in_proj|x_proj|dt_proj|wr|wg|wk|wv|wk_c|wr_c|w_lora_a)$",
+     ("data", "model")),
+    (r"(out_proj|wv_c|w_lora_b)$", ("model", "data")),
+    (r"A_log$", (None, None)),
+]
+
+
+# Inference layout (hillclimb, §Perf): decode gathers FSDP-sharded weights
+# EVERY step for a handful of tokens — ruinous. Dense weights go pure-TP
+# (they fit HBM without the optimizer state); expert weights shard E over
+# 'data' and the ff dim over 'model' so the expert matmul needs NO weight
+# gather (tokens are all-gathered instead — KB vs GB at decode batch sizes).
+_INFERENCE_RULES: list[tuple[str, tuple]] = [
+    (r"(embed|lm_head)/table$", ("model", None)),
+    (r"pos/pos$", (None, None)),
+    (r"(wq|wk|wv)$", (None, "model")),
+    (r"wo$", ("model", None)),
+    (r"(gate|up)$", (None, "model")),
+    (r"down$", ("model", None)),
+    (r"moe/(wg|wu)$", ("data", None, "model")),
+    (r"moe/wd$", ("data", "model", None)),
+    (r"moe/router$", (None, None)),
+    (r"(in_proj|x_proj|dt_proj|wr|wg|wk|wv|wk_c|wr_c|w_lora_a)$",
+     (None, "model")),
+    (r"(out_proj|wv_c|w_lora_b)$", ("model", None)),
+    (r"A_log$", (None, None)),
+]
+
+
+def spec_for_param(path: str, ndim: int, *, inference: bool = False) -> P:
+    rules = _INFERENCE_RULES if inference else _RULES
+    for pat, spec in rules:
+        if re.search(pat, path):
+            spec = tuple(spec)
+            if len(spec) > ndim:
+                spec = spec[-ndim:]
+            pad = (None,) * (ndim - len(spec))
+            return P(*(pad + spec))
+    return P(*((None,) * ndim))
+
+
+def _mesh_filter(spec: P, mesh) -> P:
+    """Drop axes not present in the mesh (e.g. 'pod' on single-pod)."""
+    def ok(a):
+        if a is None:
+            return None
+        if isinstance(a, tuple):
+            kept = tuple(x for x in a if x in mesh.shape)
+            return kept if kept else None
+        return a if a in mesh.shape else None
+    return P(*(ok(a) for a in spec))
+
+
+def param_shardings(params_shape, mesh, *, inference: bool = False):
+    """Map an eval_shape'd param pytree to NamedShardings by path rules."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        spec = _mesh_filter(
+            spec_for_param(name, len(leaf.shape), inference=inference), mesh)
+        # Never shard a dim that the mesh axis doesn't divide reasonably —
+        # GSPMD pads, which is fine for model dims but wasteful for tiny ones.
+        spec = _drop_tiny(spec, leaf.shape, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _drop_tiny(spec: P, shape, mesh) -> P:
+    # jit *input* shardings must divide dimensions exactly (GSPMD pads only
+    # internal values) — drop axes that don't divide (e.g. whisper's 51865
+    # vocab stays replicated; the big 128k-262k vocabs shard cleanly).
+    fixed = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(ax if (dim >= size and dim % size == 0) else None)
+    return P(*fixed)
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_sharding(mesh, ndim: int):
+    dp = dp_axes(mesh)
+    return NamedSharding(mesh, P(dp if dp else None,
+                                 *([None] * (ndim - 1))))
+
+
+def cache_shardings(cache_shape, mesh, *, batch: int):
+    """KV caches: batch over dp when divisible, else shard the sequence axis
+    over 'data' (context parallelism for long_500k decode)."""
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def one(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        nd = len(leaf.shape)
+        if leaf.shape and leaf.shape[-1] == 0:
+            return NamedSharding(mesh, P())
+        if "ck" in name or "cv" in name or nd < 3:
+            return NamedSharding(mesh, P())
+        # stacked (L, B, H, S, D) attention caches / (L, B, ...) ssm states;
+        # the VLM's superblock nesting adds leading dims, so locate the batch
+        # dim by size (first match from the left past the stack dim).
+        bidx = next((i for i in range(1, nd) if leaf.shape[i] == batch), None)
+        if (batch >= dp_size and bidx is not None
+                and leaf.shape[bidx] % dp_size == 0 and dp):
+            spec = [None] * nd
+            spec[bidx] = dp
+            return NamedSharding(mesh, P(*spec))
+        if (nd >= 4 and "data" in mesh.shape
+                and leaf.shape[-2] % mesh.shape["data"] == 0):
+            # (L, B, Hkv, S, D): context-parallel over the seq axis (long
+            # decode). Small recurrent states (non-divisible) stay replicated.
+            spec = [None] * nd
+            spec[-2] = "data"
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])

@@ -1,0 +1,75 @@
+"""Straggler and fault monitoring for the training loop.
+
+On a real pod this wraps per-host heartbeats; the detection logic (which is
+what we can exercise here) is host-agnostic: robust step-time outliers via
+median + MAD, plus an EFTA fault-rate monitor that escalates when the
+attention layer reports a sustained detection rate (a symptom of a failing
+chip rather than transient SEUs — the launcher should then cordon the host
+and trigger an elastic restart from the last checkpoint).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Optional
+
+
+@dataclasses.dataclass
+class StragglerVerdict:
+    is_straggler: bool
+    step_time: float
+    median: float
+    threshold: float
+
+
+class StragglerMonitor:
+    """Flags steps slower than median + k*MAD over a sliding window."""
+
+    def __init__(self, window: int = 50, k: float = 6.0, warmup: int = 5):
+        self.times: Deque[float] = collections.deque(maxlen=window)
+        self.k = k
+        self.warmup = warmup
+        self._t0: Optional[float] = None
+        self.flagged = 0
+
+    def step_start(self):
+        self._t0 = time.perf_counter()
+
+    def step_end(self) -> StragglerVerdict:
+        dt = time.perf_counter() - self._t0
+        verdict = self.observe(dt)
+        return verdict
+
+    def observe(self, dt: float) -> StragglerVerdict:
+        if len(self.times) < self.warmup:
+            self.times.append(dt)
+            return StragglerVerdict(False, dt, dt, float("inf"))
+        ts = sorted(self.times)
+        med = ts[len(ts) // 2]
+        mad = sorted(abs(t - med) for t in ts)[len(ts) // 2]
+        thr = med + self.k * max(mad, 0.05 * med)
+        is_slow = dt > thr
+        self.times.append(dt)
+        if is_slow:
+            self.flagged += 1
+        return StragglerVerdict(is_slow, dt, med, thr)
+
+
+class FaultRateMonitor:
+    """Escalates when EFTA detections persist (suspect bad hardware)."""
+
+    def __init__(self, window: int = 100, sustained_threshold: float = 0.2):
+        self.history: Deque[int] = collections.deque(maxlen=window)
+        self.sustained_threshold = sustained_threshold
+
+    def observe(self, detected_this_step: int) -> str:
+        self.history.append(int(detected_this_step))
+        if not self.history:
+            return "ok"
+        rate = sum(1 for d in self.history if d > 0) / len(self.history)
+        if len(self.history) >= 20 and rate >= self.sustained_threshold:
+            return "cordon"      # sustained faults: cordon host, elastic restart
+        if detected_this_step > 0:
+            return "corrected"   # transient SEU handled in-kernel by EFTA
+        return "ok"

@@ -1,0 +1,2 @@
+from repro.kernels.efta_attention import efta_attention_pallas
+from repro.kernels.ops import attention, attention_jit

@@ -1,0 +1,422 @@
+"""EFTA — fused fault-tolerant flash attention as a Pallas TPU kernel.
+
+This is the TPU-native artifact of the paper: attention computation and the
+hybrid fault-tolerance scheme (tensor-checksum ABFT + SNVR + unified
+verification, Algorithm 1) execute inside ONE kernel; the O(n²) score and
+probability tiles never leave VMEM.
+
+Architecture mapping (DESIGN.md §2):
+  * grid = (batch·heads, Sq/Br, Skv/Bc); the KV axis is ``arbitrary``
+    (sequential) so running (m, ℓ, O, O_checksums) accumulate in VMEM scratch
+    across KV steps — the Pallas analogue of the paper's intra-CTA loop.
+  * checksum folds use *static strided slices* at lane-tile boundaries
+    (``s = 128`` → each fold term is a whole-vreg add; ``s = 8`` reproduces the
+    paper's MMA-atom stride for fidelity experiments).
+  * fault injection is a scalar-prefetch descriptor (SEU model): a single bit
+    of a chosen tile element is XOR-flipped at a chosen (site, kv-block).
+
+Validated against ``repro.kernels.ref`` in interpret mode (CPU); the same
+code lowers for TPU via Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.efta import EFTAConfig, MASK_VALUE
+from repro.core.fault import Site
+
+# fault descriptor layout (int32[8]):
+# [site, kv_block, bh, row, col, bit, enabled, _pad]
+F_SITE, F_BLOCK, F_BH, F_ROW, F_COL, F_BIT, F_ON = range(7)
+
+
+def _flip(tile, *, on, row, col, bit):
+    """XOR-flip one bit of tile[row, col] when ``on`` — fully vectorized."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, tile.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, tile.shape, 1)
+    hit = (rows == row) & (cols == col) & on
+    ubits = jax.lax.bitcast_convert_type(tile, jnp.uint32)
+    mask = jnp.where(hit, jnp.left_shift(jnp.uint32(1), bit.astype(jnp.uint32)),
+                     jnp.uint32(0))
+    return jax.lax.bitcast_convert_type(ubits ^ mask, tile.dtype)
+
+
+def _site_hit(fault_ref, site: Site, *, bh, blk):
+    return ((fault_ref[F_ON] == 1)
+            & (fault_ref[F_SITE] == int(site))
+            & (fault_ref[F_BH] == bh)
+            & (fault_ref[F_BLOCK] == blk))
+
+
+def _fold_slices(tile, stride: int, weighted: bool):
+    """Strided fold along the last dim via static lane-tile slices.
+
+    tile: (R, W) -> (R, stride). Each term is a whole-tile add when
+    ``stride % 128 == 0`` — the TPU analogue of the paper's intra-thread
+    strided accumulation (zero cross-lane shuffles).
+    """
+    w = tile.shape[-1]
+    g = w // stride
+    acc = jnp.zeros((tile.shape[0], stride), jnp.float32)
+    for l in range(g):
+        seg = tile[:, l * stride:(l + 1) * stride].astype(jnp.float32)
+        acc = acc + (float(l + 1) * seg if weighted else seg)
+    return acc
+
+
+def _fold_prod(tile, stride: int):
+    w = tile.shape[-1]
+    g = w // stride
+    acc = jnp.ones((tile.shape[0], stride), jnp.float32)
+    for l in range(g):
+        acc = acc * tile[:, l * stride:(l + 1) * stride].astype(jnp.float32)
+    return acc
+
+
+def _correct_strided(tile, d1, d2, bad, stride: int):
+    """Locate (segment l* from the weighted/unweighted delta ratio) and add
+    the delta back — paper §4.1 correction, vectorized per fold segment."""
+    g = tile.shape[-1] // stride
+    safe = jnp.where(bad, d1, 1.0)
+    l_star = jnp.clip(jnp.round(d2 / safe) - 1, 0, g - 1).astype(jnp.int32)
+    out = tile
+    for l in range(g):
+        patch = jnp.where(bad & (l_star == l), d1, 0.0)
+        seg = out[:, l * stride:(l + 1) * stride] + patch
+        out = jax.lax.dynamic_update_slice(out, seg, (0, l * stride))
+    return out
+
+
+def _efta_kernel(
+    # scalar prefetch
+    fault_ref,
+    # inputs
+    q_ref, k_ref, v_ref,
+    # outputs
+    o_ref, rep_ref,
+    # scratch
+    m_scr, l_scr, lsh_scr, r_scr, acc_scr, oc1_scr, oc2_scr, det_scr,
+    *,
+    sm_scale: float,
+    causal: bool,
+    window: Optional[int],
+    block_q: int,
+    block_kv: int,
+    n_kv: int,
+    kv_seq_len: int,
+    s_kv: int,
+    s_out: int,
+    mode: str,
+    unified: bool,
+    shadow_rowsum: bool,
+    shadow_rowmax: bool,
+    eps1: float,
+    eps2: float,
+    eps3: float,
+):
+    bh = pl.program_id(0)
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+    ft = mode != "off"
+    correct = mode == "correct"
+    g_kv = block_kv // s_kv
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, MASK_VALUE)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        lsh_scr[...] = jnp.zeros_like(lsh_scr)
+        r_scr[...] = jnp.zeros_like(r_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        oc1_scr[...] = jnp.zeros_like(oc1_scr)
+        oc2_scr[...] = jnp.zeros_like(oc2_scr)
+        det_scr[0] = 0
+        det_scr[1] = 0
+        det_scr[2] = 0
+        det_scr[3] = 0
+        det_scr[4] = 0
+
+    # Causal block skipping: KV blocks strictly above the diagonal contribute
+    # nothing — skip their MXU work entirely (flash-attention-2 style).
+    q_start = iq * block_q
+    kv_start = jk * block_kv
+    run = True
+    if causal:
+        run = kv_start <= q_start + block_q - 1
+    if window is not None:
+        run = run & (q_start - (kv_start + block_kv - 1) < window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[...]                      # (Br, D)
+        k = k_ref[...]                      # (Bc, D)
+        v = v_ref[...]                      # (Bc, D)
+
+        # ---- GEMM I on the MXU (bf16 in, f32 accumulate) + ABFT ----------
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale      # (Br, Bc)
+        fault_row = fault_ref[F_ROW] - q_start
+        s = _flip(s, on=_site_hit(fault_ref, Site.GEMM1, bh=bh, blk=jk),
+                  row=fault_row, col=fault_ref[F_COL], bit=fault_ref[F_BIT])
+        if ft:
+            # NVR range restriction on scores: keeps the weighted fold finite
+            # under exponent-bit corruptions (location ratio stays exact);
+            # NaN/inf zero out and the checksum delta restores them exactly.
+            s = jnp.where(jnp.isfinite(s), jnp.clip(s, -1e6, 1e6), 0.0)
+
+        if ft:
+            # CCG: tensor checksums of K (strided fold along the key axis is
+            # a fold along *rows* of K — sublane adds), then one skinny GEMM.
+            g = block_kv // s_kv
+            kc1 = jnp.zeros((s_kv, k.shape[-1]), jnp.float32)
+            kc2 = jnp.zeros((s_kv, k.shape[-1]), jnp.float32)
+            for l in range(g):
+                seg = k[l * s_kv:(l + 1) * s_kv, :].astype(jnp.float32)
+                kc1 = kc1 + seg
+                kc2 = kc2 + float(l + 1) * seg
+            sc1 = jax.lax.dot_general(
+                q.astype(jnp.float32), kc1, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * sm_scale  # (Br, s_kv)
+            sc2 = jax.lax.dot_general(
+                q.astype(jnp.float32), kc2, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * sm_scale
+            sum1 = _fold_slices(s, s_kv, weighted=False)
+            sum2 = _fold_slices(s, s_kv, weighted=True)
+            d1 = sc1 - sum1
+            d2 = sc2 - sum2
+            bad = jnp.abs(d1) > eps1
+            det_scr[0] += bad.sum(dtype=jnp.int32)
+            if correct:
+                s = _correct_strided(s, d1, d2, bad, s_kv)
+
+        # ---- mask, running max ------------------------------------------
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = cols < kv_seq_len
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= rows - cols < window
+        s_m = jnp.where(mask, s, MASK_VALUE)
+        blockmax = jnp.max(s_m, axis=1, keepdims=True)          # (Br, 1)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, blockmax)
+        m_new = _flip(m_new, on=_site_hit(fault_ref, Site.ROWMAX, bh=bh, blk=jk),
+                      row=fault_row, col=jnp.int32(0), bit=fault_ref[F_BIT])
+        if ft and shadow_rowmax:
+            m_chk = jnp.maximum(jax.lax.optimization_barrier(m_prev), blockmax)
+            bad_m = m_new != m_chk
+            det_scr[2] += bad_m.sum(dtype=jnp.int32)
+            if correct:
+                m_new = jnp.where(bad_m, m_chk, m_new)
+        m_scr[...] = m_new
+        alive = m_new > MASK_VALUE / 2
+        m_sub = jnp.where(alive, m_new, 0.0)
+
+        # ---- EXP with checksum reuse (paper Case 2) ----------------------
+        cap = 80.0 / g_kv
+        p_raw = jnp.exp(jnp.minimum(s - m_sub, cap))
+        p_raw = _flip(p_raw, on=_site_hit(fault_ref, Site.EXP, bh=bh, blk=jk),
+                      row=fault_row, col=fault_ref[F_COL], bit=fault_ref[F_BIT])
+        if ft:
+            pc1 = jnp.exp(jnp.minimum(sc1 - g_kv * m_sub, cap * g_kv))
+            prod = _fold_prod(p_raw, s_kv)
+            ref = jnp.maximum(jnp.abs(pc1), 1e-20)
+            bad_e = jnp.abs(prod - pc1) > eps2 * ref + 1e-20
+            capped = (s - m_sub) > (cap - 1e-3)
+            col_ok = jnp.ones((s.shape[0], s_kv), dtype=bool)
+            for l in range(g_kv):
+                col_ok &= ~capped[:, l * s_kv:(l + 1) * s_kv]
+            bad_e &= col_ok
+            det_scr[1] += bad_e.sum(dtype=jnp.int32)
+            if correct:
+                recomputed = jnp.exp(jnp.minimum(s - m_sub, cap))
+                for l in range(g_kv):
+                    seg = jnp.where(
+                        bad_e, recomputed[:, l * s_kv:(l + 1) * s_kv],
+                        p_raw[:, l * s_kv:(l + 1) * s_kv])
+                    p_raw = jax.lax.dynamic_update_slice(
+                        p_raw, seg, (0, l * s_kv))
+        if ft and shadow_rowmax and correct:
+            p_raw = jnp.minimum(p_raw, 1.0)  # NVR range restriction on P
+        p = jnp.where(mask, p_raw, 0.0)
+
+        # ---- rescale + rowsum (+ shadow) ---------------------------------
+        alpha = jnp.where(alive, jnp.exp(m_prev - m_new), 1.0)  # (Br, 1)
+        l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        l_new = _flip(l_new, on=_site_hit(fault_ref, Site.ROWSUM, bh=bh, blk=jk),
+                      row=fault_row, col=jnp.int32(0), bit=fault_ref[F_BIT])
+        l_scr[...] = l_new
+        if ft and shadow_rowsum:
+            p_sh = jax.lax.optimization_barrier(p)
+            lsh_scr[...] = alpha * lsh_scr[...] + jnp.sum(p_sh, axis=1,
+                                                          keepdims=True)
+        blk_alive = blockmax > MASK_VALUE / 2
+        r_scr[...] = alpha * r_scr[...] + jnp.where(
+            blk_alive, jnp.exp(blockmax - m_sub), 0.0)
+
+        # ---- GEMM II + rescale, checksums carried (Alg.1 l.18-21) --------
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)                 # (Br, D)
+        acc_new = alpha * acc_scr[...] + pv
+        acc_new = _flip(acc_new, on=_site_hit(fault_ref, Site.GEMM2, bh=bh, blk=jk),
+                        row=fault_row, col=fault_ref[F_COL], bit=fault_ref[F_BIT])
+        acc_scr[...] = acc_new
+        if ft:
+            g2 = v.shape[-1] // s_out
+            vc1 = jnp.zeros((v.shape[0], s_out), jnp.float32)
+            vc2 = jnp.zeros((v.shape[0], s_out), jnp.float32)
+            for l in range(g2):
+                seg = v[:, l * s_out:(l + 1) * s_out].astype(jnp.float32)
+                vc1 = vc1 + seg
+                vc2 = vc2 + float(l + 1) * seg
+            pf = p.astype(jnp.float32)
+            oc1_scr[...] = alpha * oc1_scr[...] + jax.lax.dot_general(
+                pf, vc1, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            oc2_scr[...] = alpha * oc2_scr[...] + jax.lax.dot_general(
+                pf, vc2, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            if not unified:
+                # Unoptimized EFTA: verify the output checksum at EVERY kv
+                # step (Tables 1-2 compare this against unified verification).
+                s1 = _fold_slices(acc_scr[...], s_out, weighted=False)
+                d1o = oc1_scr[...] - s1
+                det_scr[4] += (jnp.abs(d1o) > eps3).sum(dtype=jnp.int32)
+
+    # ---- finalize: SNVR on ℓ + unified output verification ---------------
+    @pl.when(jk == n_kv - 1)
+    def _finalize():
+        l_f = l_scr[...]
+        r_f = r_scr[...]
+        if ft:
+            upper = float(kv_seq_len) + 1e-3
+            in_range = (l_f >= r_f - 1e-3) & (l_f <= upper) & jnp.isfinite(l_f)
+            if shadow_rowsum:
+                lsh = lsh_scr[...]
+                mism = jnp.abs(l_f - lsh) > 1e-5 * jnp.maximum(jnp.abs(lsh), 1e-6)
+                bad_l = ((~in_range) | mism) & (r_f > 0)
+                fb_ok = (lsh >= r_f - 1e-3) & (lsh <= upper) & jnp.isfinite(lsh)
+                fallback = jnp.where(fb_ok, lsh, r_f)
+            else:
+                bad_l = (~in_range) & (r_f > 0)
+                fallback = r_f
+            det_scr[3] += bad_l.sum(dtype=jnp.int32)
+            if correct:
+                l_f = jnp.where(bad_l, fallback, l_f)
+        l_safe = jnp.where(l_f == 0.0, 1.0, l_f)
+        o = acc_scr[...] / l_safe
+        if ft:
+            oc1 = oc1_scr[...] / l_safe
+            oc2 = oc2_scr[...] / l_safe
+            s1 = _fold_slices(o, s_out, weighted=False)
+            s2 = _fold_slices(o, s_out, weighted=True)
+            d1 = oc1 - s1
+            d2 = oc2 - s2
+            bad = jnp.abs(d1) > eps3
+            det_scr[4] += bad.sum(dtype=jnp.int32)
+            if correct:
+                o = _correct_strided(o, d1, d2, bad, s_out)
+        o_ref[...] = o.astype(o_ref.dtype)
+        rep_ref[0] = det_scr[0]
+        rep_ref[1] = det_scr[1]
+        rep_ref[2] = det_scr[2]
+        rep_ref[3] = det_scr[3]
+        rep_ref[4] = det_scr[4]
+
+
+def efta_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    cfg: EFTAConfig,
+    causal: bool = False,
+    window: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+    fault: Optional[jax.Array] = None,
+    block_q: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused EFTA kernel. q: (B, H, Sq, D); k, v: (B, Hkv, Skv, D).
+
+    Returns (out (B, H, Sq, D), detected (4,) int32).
+    ``fault``: int32[8] SEU descriptor (see module docstring) or None.
+    ``interpret=True`` validates on CPU; on TPU pass False.
+    """
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    grp = h // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+
+    block_q = min(block_q, sq)
+    block_kv = min(cfg.block_kv, skv)
+    if sq % block_q or skv % block_kv:
+        raise ValueError(f"seq lens ({sq},{skv}) must divide blocks "
+                         f"({block_q},{block_kv})")
+    s_kv = cfg.kv_stride(block_kv)
+    s_out = cfg.out_stride(d)
+    eps1, eps2, eps3 = cfg.thresholds(q.dtype)
+    n_q, n_kv = sq // block_q, skv // block_kv
+
+    qr = q.reshape(b * h, sq, d)
+    kr = k.reshape(b * hkv, skv, d)
+    vr = v.reshape(b * hkv, skv, d)
+    if fault is None:
+        fault = jnp.zeros((8,), jnp.int32)
+
+    kernel = functools.partial(
+        _efta_kernel,
+        sm_scale=scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, n_kv=n_kv, kv_seq_len=skv,
+        s_kv=s_kv, s_out=s_out, mode=cfg.mode, unified=cfg.unified,
+        shadow_rowsum=cfg.shadow_rowsum, shadow_rowmax=cfg.shadow_rowmax,
+        eps1=eps1, eps2=eps2, eps3=eps3)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda bh, i, j, f: (bh, i, 0)),
+            pl.BlockSpec((None, block_kv, d),
+                         lambda bh, i, j, f, g=grp: (bh // g, j, 0)),
+            pl.BlockSpec((None, block_kv, d),
+                         lambda bh, i, j, f, g=grp: (bh // g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, block_q, d), lambda bh, i, j, f: (bh, i, 0)),
+            pl.BlockSpec((None, None, 5), lambda bh, i, j, f: (bh, i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l shadow
+            pltpu.VMEM((block_q, 1), jnp.float32),   # r (SNVR bound)
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+            pltpu.VMEM((block_q, s_out), jnp.float32),  # O checksum 1
+            pltpu.VMEM((block_q, s_out), jnp.float32),  # O checksum 2
+            pltpu.SMEM((5,), jnp.int32),             # detection counters
+        ],
+    )
+
+    out, rep = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+            jax.ShapeDtypeStruct((b * h, n_q, 5), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(fault, qr, kr, vr)
+
+    return out.reshape(b, h, sq, d), rep.sum(axis=(0, 1))

@@ -1,0 +1,70 @@
+"""Jit'd dispatch for attention implementations.
+
+``attention(...)`` routes between:
+  * ``efta_pallas`` — the fused Pallas TPU kernel (interpret=True on CPU)
+  * ``efta``        — pure-JAX EFTA (jit/pjit/differentiable; used at scale)
+  * ``flash``       — pure-JAX flash attention, fault tolerance off
+  * ``reference``   — naive O(n²) softmax attention
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.efta import EFTAConfig, FTReport, efta_attention, reference_attention
+from repro.kernels.efta_attention import efta_attention_pallas
+
+IMPLS = ("efta_pallas", "efta", "flash", "reference")
+
+
+def attention(
+    q, k, v, *,
+    impl: str = "efta",
+    cfg: Optional[EFTAConfig] = None,
+    causal: bool = False,
+    window: Optional[int] = None,
+    kv_len=None,
+    q_offset=0,
+    sm_scale: Optional[float] = None,
+    fault=None,
+    kv_positions=None,
+    interpret: bool = True,
+):
+    """Unified attention entry point. Returns (out, FTReport)."""
+    cfg = cfg or EFTAConfig()
+    if impl == "reference":
+        out = reference_attention(q, k, v, causal=causal, window=window,
+                                  kv_len=kv_len, q_offset=q_offset,
+                                  sm_scale=sm_scale, kv_positions=kv_positions)
+        return out, FTReport.zero()
+    if impl == "flash":
+        off = EFTAConfig(mode="off", stride=cfg.stride, block_kv=cfg.block_kv)
+        return efta_attention(q, k, v, cfg=off, causal=causal, window=window,
+                              kv_len=kv_len, q_offset=q_offset,
+                              sm_scale=sm_scale, kv_positions=kv_positions)
+    if impl == "efta":
+        return efta_attention(q, k, v, cfg=cfg, causal=causal, window=window,
+                              kv_len=kv_len, q_offset=q_offset,
+                              sm_scale=sm_scale, fault=fault,
+                              kv_positions=kv_positions)
+    if impl == "efta_pallas":
+        if kv_len is not None or q_offset != 0:
+            raise NotImplementedError(
+                "ragged KV / decode offsets route through impl='efta'")
+        out, det = efta_attention_pallas(
+            q, k, v, cfg=cfg, causal=causal, window=window,
+            sm_scale=sm_scale, fault=fault, interpret=interpret)
+        return out, FTReport(det, det if cfg.mode == "correct" else det * 0,
+                             jnp.zeros((3,), jnp.float32))
+    raise ValueError(f"unknown attention impl {impl!r}; one of {IMPLS}")
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "cfg", "causal", "window",
+                                             "sm_scale", "interpret"))
+def attention_jit(q, k, v, *, impl="efta", cfg=None, causal=False, window=None,
+                  sm_scale=None, interpret=True):
+    return attention(q, k, v, impl=impl, cfg=cfg, causal=causal, window=window,
+                     sm_scale=sm_scale, interpret=interpret)

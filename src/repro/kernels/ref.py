@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas EFTA kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.efta import reference_attention  # noqa: F401  (re-export)
+
+
+def fold1_ref(x, stride):
+    g = x.shape[-1] // stride
+    return x.reshape(*x.shape[:-1], g, stride).astype(jnp.float32).sum(-2)
+
+
+def fold2_ref(x, stride):
+    g = x.shape[-1] // stride
+    w = jnp.arange(1, g + 1, dtype=jnp.float32)
+    xr = x.reshape(*x.shape[:-1], g, stride).astype(jnp.float32)
+    return (xr * w[:, None]).sum(-2)
+
+
+def foldprod_ref(x, stride):
+    g = x.shape[-1] // stride
+    return x.reshape(*x.shape[:-1], g, stride).astype(jnp.float32).prod(-2)
+
+
+def attention_ref(q, k, v, *, causal=False, window=None, sm_scale=None):
+    """Oracle for the kernel: naive softmax attention (GQA aware)."""
+    return reference_attention(q, k, v, causal=causal, window=window,
+                               sm_scale=sm_scale)

@@ -1,0 +1,358 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Each cell produces:
+  1. CERTIFICATION - the full-depth model (layer stack as lax.scan) lowers and
+     compiles for the production mesh; ``memory_analysis()`` gives per-device
+     bytes (fits 16 GB HBM?).
+  2. ROOFLINE TERMS - XLA's cost_analysis counts while-loop bodies ONCE
+     (verified empirically), so per-layer costs are extracted from two small
+     UNROLLED probe compiles (depth k1 and k2 = k1 + period) and extrapolated:
+         total(L) = F(k1) + n_periods * (F(k2) - F(k1))
+     Probe depths are flag-aware (gemma's 5:1 local:global period, hymba's 3
+     fixed full-attention layers, the VLM's cross-attn superblock) so the
+     period difference captures exactly one structural repeat.
+     Known accounting gap: SSM per-timestep recurrences stay inside a while
+     body (undercount ~1-5% of SSM-arch FLOPs; projections dominate).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell, resumable
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.shapes import SHAPES, cell_applicable
+from repro.distributed.sharding import (batch_sharding, cache_shardings,
+                                        param_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import build_model
+from repro.optim.adamw import AdamW, warmup_cosine
+from repro.train.step import make_train_step
+from repro.train.state import TrainState
+from repro.utils.hlo import collective_bytes, count_ops
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+
+def cell_config(arch: str, shape_name: str):
+    """The cell's model config (with dry-run-appropriate FT block size)."""
+    cfg = get_config(arch)
+    if shape_name == "long_500k":
+        # 500k-token KV scan at Bc=512 would be 1024 loop steps; larger
+        # blocks keep probe unrolls tractable and cut checksum width ratio.
+        cfg = dataclasses.replace(
+            cfg, ft=dataclasses.replace(cfg.ft, block_kv=32768))
+    if shape_name in ("prefill_32k", "decode_32k"):
+        cfg = dataclasses.replace(
+            cfg, ft=dataclasses.replace(cfg.ft, block_kv=2048))
+    return cfg
+
+
+def probe_plan(cfg):
+    """(k1, k2, n_periods) such that total = F(k1) + n_periods*(F(k2)-F(k1)).
+
+    Probe depths keep the count of structurally-special layers equal so the
+    difference is exactly one period of ordinary layers.
+    """
+    L = cfg.num_layers
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        ce = cfg.cross_attn_every
+        return ce, 2 * ce, (L - ce) // ce
+    if cfg.family == "hybrid":
+        # full-attn at {0, mid, last}: any k >= 4 has exactly 3 globals
+        # (F(5)-F(4) isolates one pure sliding-window layer)
+        k1 = min(4, L - 1)
+        return k1, k1 + 1, L - k1
+    a = cfg.attn
+    if a is not None and a.global_every:
+        ge = a.global_every
+        k1 = L % ge or ge
+        return k1, k1 + ge, (L - k1) // ge
+    return 1, 2, L - 1
+
+
+def probe_config(cfg, k: int):
+    enc = min(cfg.encoder_layers, k) if cfg.encoder_layers else 0
+    return dataclasses.replace(
+        cfg, num_layers=k, encoder_layers=enc, scan_layers=False,
+        ft=dataclasses.replace(cfg.ft, scan_unroll=True))
+
+
+def _sds(tree, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings)
+
+
+def _repl(mesh):
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+
+def _batch_specs(cfg, shape, mesh):
+    b, s = shape.global_batch, shape.seq_len
+    bs = batch_sharding(mesh, 2)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=bs),
+        "targets": jax.ShapeDtypeStruct((b, s), jnp.int32, sharding=bs),
+    }
+    if cfg.family in ("vlm", "audio"):
+        batch["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=batch_sharding(mesh, 3))
+    return batch
+
+
+def input_specs(arch_or_cfg, shape_name: str, mesh, *,
+                inference_layout: bool = False):
+    """ShapeDtypeStruct stand-ins for every input of this cell (no alloc)."""
+    cfg = (arch_or_cfg if not isinstance(arch_or_cfg, str)
+           else cell_config(arch_or_cfg, shape_name))
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    params_shape = jax.eval_shape(
+        model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pshard = param_shardings(params_shape, mesh, inference=inference_layout)
+    params = _sds(params_shape, pshard)
+
+    if shape.kind == "train":
+        opt = AdamW(lr=warmup_cosine(3e-4),
+                    state_dtype="bfloat16" if cfg.dtype == "bfloat16" else None)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        opt_sds = type(opt_shape)(
+            m=_sds(opt_shape.m, pshard), v=_sds(opt_shape.v, pshard),
+            count=jax.ShapeDtypeStruct((), jnp.int32, sharding=_repl(mesh)))
+        state = TrainState(
+            params=params, opt=opt_sds,
+            step=jax.ShapeDtypeStruct((), jnp.int32, sharding=_repl(mesh)),
+            ef=None)
+        return {"state": state, "batch": _batch_specs(cfg, shape, mesh),
+                "opt": opt, "model": model, "cfg": cfg}
+
+    b = shape.global_batch
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(b, cache_len=shape.seq_len))
+    cache = _sds(cache_shape, cache_shardings(cache_shape, mesh, batch=b))
+    bs = batch_sharding(mesh, 2) if b >= 8 else _repl(mesh)
+    tok_len = shape.seq_len if shape.kind == "prefill" else 1
+    tokens = jax.ShapeDtypeStruct((b, tok_len), jnp.int32, sharding=bs)
+    extra = {}
+    if cfg.family in ("vlm", "audio"):
+        extra["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=batch_sharding(mesh, 3) if b >= 8 else _repl(mesh))
+    return {"params": params, "cache": cache, "tokens": tokens,
+            "extra": extra, "model": model, "cfg": cfg}
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    n_active = cfg.active_param_count_estimate()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult) * n_active * tokens
+
+
+def _compile_cell(cfg, shape_name, mesh, *, inference_layout=False,
+                  microbatches=1):
+    """Lower + compile one variant. Returns (compiled, lower_s, compile_s)."""
+    shape = SHAPES[shape_name]
+    spec = input_specs(cfg, shape_name, mesh,
+                       inference_layout=inference_layout)
+    model = spec["model"]
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            step = make_train_step(model, spec["opt"], mesh=mesh,
+                                   microbatches=microbatches)
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(
+                spec["state"], spec["batch"])
+        elif shape.kind == "prefill":
+            def prefill(params, tokens, cache, extra):
+                return model.prefill(params, tokens, cache, mesh=mesh, **extra)
+            lowered = jax.jit(prefill, donate_argnums=(2,)).lower(
+                spec["params"], spec["tokens"], spec["cache"], spec["extra"])
+        else:
+            def decode(params, token, cache):
+                return model.decode_step(params, token, cache, mesh=mesh)
+            lowered = jax.jit(decode, donate_argnums=(2,)).lower(
+                spec["params"], spec["tokens"], spec["cache"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    return compiled, t_lower, time.time() - t0 - t_lower
+
+
+def _costs(compiled):
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": collective_bytes(txt),
+        "ops": count_ops(txt),
+    }
+
+
+def _extrapolate(c1, c2, n):
+    def lin(a, b):
+        return a + n * (b - a)
+    kinds = set(c1["coll"]) | set(c2["coll"])
+    coll = {k: max(0.0, lin(c1["coll"].get(k, 0), c2["coll"].get(k, 0)))
+            for k in kinds}
+    return {
+        "flops": lin(c1["flops"], c2["flops"]),
+        "bytes": lin(c1["bytes"], c2["bytes"]),
+        "coll": coll,
+    }
+
+
+def run_cell(arch, shape_name, *, multi_pod, out_dir, probes=True,
+             cfg_override=None, tag="", inference_layout=False,
+             microbatches=1):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = SHAPES[shape_name]
+    cfg = cfg_override or cell_config(arch, shape_name)
+    kw = dict(inference_layout=inference_layout, microbatches=microbatches)
+
+    # 1) certification compile: full depth, scanned
+    compiled, t_lower, t_compile = _compile_cell(cfg, shape_name, mesh, **kw)
+    mem = compiled.memory_analysis()
+    peak = ((getattr(mem, "argument_size_in_bytes", 0) or 0)
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0))
+
+    # 2) probe compiles: layer-count extrapolation for roofline terms
+    if probes:
+        k1, k2, n_per = probe_plan(cfg)
+        p1 = _costs(_compile_cell(probe_config(cfg, k1), shape_name, mesh,
+                                  **kw)[0])
+        p2 = _costs(_compile_cell(probe_config(cfg, k2), shape_name, mesh,
+                                  **kw)[0])
+        total = _extrapolate(p1, p2, n_per)
+        if microbatches > 1:
+            # the microbatch accumulation scan is a while loop too — its body
+            # is counted once by cost_analysis; scale to the real step.
+            total["flops"] *= microbatches
+            total["bytes"] *= microbatches
+            total["coll"] = {k: v * microbatches
+                             for k, v in total["coll"].items()}
+    else:
+        total = _costs(compiled)
+        k1 = k2 = n_per = -1
+
+    n_dev = mesh.devices.size
+    flops_dev = total["flops"]
+    bytes_dev = total["bytes"]
+    coll_total = float(sum(total["coll"].values()))
+    mf = model_flops_estimate(cfg, shape)
+
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll_total / ICI_BW,
+    }
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev, "kind": shape.kind, "tag": tag,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "probe_plan": [k1, k2, n_per],
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": total["coll"],
+        "collective_total_per_device": coll_total,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": peak,
+            "fits_16gb": bool(peak <= 16e9),
+        },
+        "model_flops": mf,
+        "roofline": terms,
+        "dominant": max(terms, key=terms.get),
+        "useful_flops_ratio": (mf / (flops_dev * n_dev) if flops_dev else None),
+        "roofline_fraction": (
+            mf / PEAK_FLOPS / n_dev / max(terms.values())
+            if max(terms.values()) > 0 else None),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = "__" + tag if tag else ""
+    name = "{}__{}__{}{}.json".format(arch, shape_name, result["mesh"], suffix)
+    (out_dir / name).write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=DOC)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for shape in SHAPES:
+                ok, why = cell_applicable(arch, shape)
+                if not ok:
+                    print("SKIP {} x {}: {}".format(arch, shape, why),
+                          flush=True)
+                    continue
+                for mp in (False, True):
+                    cells.append((arch, shape, mp))
+    else:
+        cells = [(args.arch, args.shape, args.multi_pod)]
+
+    failures = 0
+    for arch, shape, mp in cells:
+        mesh_name = "2x16x16" if mp else "16x16"
+        path = out_dir / "{}__{}__{}.json".format(arch, shape, mesh_name)
+        if path.exists() and not args.force:
+            print("CACHED {} x {} x {}".format(arch, shape, mesh_name),
+                  flush=True)
+            continue
+        try:
+            t0 = time.time()
+            r = run_cell(arch, shape, multi_pod=mp, out_dir=out_dir,
+                         probes=not args.no_probes)
+            print("OK {} x {} x {}: dom={} c={:.2e} m={:.2e} x={:.2e} "
+                  "peak={:.2f}GB rf={} [{:.0f}s]".format(
+                      arch, shape, mesh_name, r["dominant"][:-2],
+                      r["roofline"]["compute_s"], r["roofline"]["memory_s"],
+                      r["roofline"]["collective_s"],
+                      r["memory"]["peak_bytes"] / 1e9,
+                      r["roofline_fraction"] and round(r["roofline_fraction"], 3),
+                      time.time() - t0), flush=True)
+        except Exception as e:
+            failures += 1
+            print("FAIL {} x {} x {}: {}: {}".format(
+                arch, shape, mesh_name, type(e).__name__, str(e)[:300]),
+                flush=True)
+            traceback.print_exc()
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

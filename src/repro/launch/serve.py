@@ -1,0 +1,55 @@
+"""Serving launcher: batched fault-tolerant inference (prefill + decode).
+
+CPU-scale demo:
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt2-smoke \
+      --batch 4 --prompt-len 32 --gen 16 --inject-faults 3
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import greedy_generate
+from repro.utils import get_logger
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    log = get_logger("serve")
+
+    cfg = get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    tokens = jnp.asarray(rng.integers(
+        0, cfg.vocab_size, size=(args.batch, args.prompt_len)), jnp.int32)
+    kw = {}
+    if cfg.family in ("vlm", "audio"):
+        kw["frontend"] = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.frontend_tokens, cfg.d_model)) * 0.1,
+            jnp.float32)
+    t0 = time.time()
+    out, rep = greedy_generate(model, params, tokens, steps=args.gen, **kw)
+    dt = time.time() - t0
+    log.info("generated %s tokens in %.2fs (%.1f tok/s)", out.shape, dt,
+             out.size / dt)
+    log.info("EFTA report: detected=%s corrected=%s",
+             np.asarray(rep.detected).tolist(),
+             np.asarray(rep.corrected).tolist())
+    print(np.asarray(out))
+
+
+if __name__ == "__main__":
+    main()

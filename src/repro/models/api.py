@@ -1,0 +1,118 @@
+"""Public model API: build, train-loss, and serving entry points."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.efta import FTReport
+from repro.models import ssm as ssm_lib
+from repro.models.attention import init_cache as init_attn_cache
+from repro.models.transformer import forward, init_params
+
+Z_LOSS = 1e-4
+
+
+class Model:
+    """Thin, stateless handle: all methods are pure functions of params."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- init ---------------------------------------------------------------
+    def init(self, rng) -> Any:
+        return init_params(rng, self.cfg)
+
+    # -- training -----------------------------------------------------------
+    def loss(self, params, batch, *, mesh=None):
+        logits, rep, aux, _ = forward(params, self.cfg, batch, mesh=mesh)
+        targets = batch["targets"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # Vocab-parallel cross-entropy: extract the target logit with a fused
+        # iota-compare-select reduction instead of take_along_axis — a gather
+        # along the sharded vocab axis would force GSPMD to all-gather the
+        # full (B, S, V) logits (21.5 GB/device at kimi's 163k vocab).
+        vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                              logits.ndim - 1)
+        tgt_logit = jnp.sum(
+            jnp.where(vocab_iota == targets[..., None], logits, 0.0), axis=-1)
+        ll = tgt_logit - logz
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones_like(ll)
+        denom = jnp.maximum(mask.sum(), 1.0)
+        ce = -(ll * mask).sum() / denom
+        zl = Z_LOSS * (jnp.square(logz) * mask).sum() / denom
+        total = ce + zl
+        if self.cfg.moe is not None:
+            total = total + self.cfg.moe.router_aux_weight * aux
+        metrics = {"loss": total, "ce": ce, "z_loss": zl, "aux": aux,
+                   "ft_detected": rep.detected, "ft_corrected": rep.corrected}
+        return total, metrics
+
+    def logits(self, params, batch, *, mesh=None):
+        out, rep, _, _ = forward(params, self.cfg, batch, mesh=mesh)
+        return out, rep
+
+    # -- serving ------------------------------------------------------------
+    def init_cache(self, batch: int, *, cache_len: Optional[int] = None):
+        cfg = self.cfg
+        cache_len = cache_len or cfg.max_seq
+        dtype = jnp.dtype(cfg.dtype)
+
+        def one_attn(cross_len=0):
+            return init_attn_cache(batch, cfg.attn, cache_len=cache_len,
+                                   dtype=dtype, cross_len=cross_len)
+
+        def stack(tree, n):
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree)
+
+        fam = cfg.family
+        if fam == "ssm":
+            one = ssm_lib.rwkv_state_init(batch, cfg.d_model, cfg.ssm, dtype)
+            return stack(one, cfg.num_layers)
+        if fam == "hybrid":
+            one = {"attn": one_attn(),
+                   "mamba": ssm_lib.mamba_state_init(batch, cfg.d_model,
+                                                     cfg.ssm, dtype)}
+            return stack(one, cfg.num_layers)
+        if fam == "vlm" and cfg.cross_attn_every:
+            ce = cfg.cross_attn_every
+            n_super = cfg.num_layers // ce
+            one = {
+                "dense": stack({"attn": one_attn()}, ce - 1),
+                "cross_blk": {"attn": one_attn(cross_len=cfg.frontend_tokens)},
+            }
+            return stack(one, n_super)
+        if fam in ("audio", "encdec"):
+            one = {"attn": one_attn(cross_len=max(cfg.frontend_tokens, 1))}
+            return stack(one, cfg.num_layers)
+        one = {"attn": one_attn()}
+        return stack(one, cfg.num_layers)
+
+    def prefill(self, params, tokens, cache, *, frontend=None,
+                enc_tokens=None, mesh=None):
+        """Process the prompt, fill caches. Returns (last-token logits, cache)."""
+        batch = {"tokens": tokens}
+        if frontend is not None:
+            batch["frontend"] = frontend
+        if enc_tokens is not None:
+            batch["enc_tokens"] = enc_tokens
+        logits, rep, _, new_cache = forward(params, self.cfg, batch, mesh=mesh,
+                                            cache=cache, mode="prefill")
+        return logits[:, -1, :], rep, new_cache
+
+    def decode_step(self, params, token, cache, *, mesh=None):
+        """token: (B, 1). Returns (logits (B, V), report, cache)."""
+        batch = {"tokens": token}
+        logits, rep, _, new_cache = forward(params, self.cfg, batch, mesh=mesh,
+                                            cache=cache, mode="decode")
+        return logits[:, -1, :], rep, new_cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,200 @@
+"""Attention block: GQA/MQA + RoPE + sliding window + cross-attention, with
+the paper's EFTA as the attention implementation.
+
+The KV cache uses slot = position % cache_len, which uniformly covers:
+  * global layers  (cache_len = max_len, slot = position)
+  * sliding window (cache_len = window,  ring buffer)
+Keys are cached post-RoPE, so ring wraparound needs no re-rotation; masking
+only needs ``kv_len`` (number of valid slots).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnCfg, FTCfg
+from repro.core.efta import EFTAConfig, FTReport
+from repro.kernels.ops import attention as attention_op
+from repro.models.layers import dense_init, matmul, rope
+
+
+class KVCache(NamedTuple):
+    k: jax.Array            # (B, Hkv, cache_len, hd)
+    v: jax.Array
+    pos: jax.Array          # int32 scalar: number of tokens seen so far
+    # cross-attention memory (computed once at prefill; empty arrays if unused)
+    ck: jax.Array
+    cv: jax.Array
+
+
+def efta_cfg(ft: FTCfg) -> EFTAConfig:
+    return EFTAConfig(mode=ft.mode, stride=ft.stride, block_kv=ft.block_kv,
+                      unified=ft.unified, shadow_rowsum=ft.shadow_rowsum,
+                      shadow_rowmax=ft.shadow_rowmax, unroll=ft.scan_unroll,
+                      kv_stride_override=ft.kv_stride_override,
+                      out_stride_override=ft.out_stride_override)
+
+
+def attn_init(key, d_model: int, a: AttnCfg, dtype, *, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, a.num_heads * a.head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, a.num_kv_heads * a.head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, a.num_kv_heads * a.head_dim, dtype),
+        "wo": dense_init(ks[3], a.num_heads * a.head_dim, d_model, dtype),
+    }
+    return p
+
+
+def init_cache(batch: int, a: AttnCfg, *, cache_len: int, dtype,
+               cross_len: int = 0, d_model: int = 0) -> KVCache:
+    shape = (batch, a.num_kv_heads, cache_len, a.head_dim)
+    cshape = (batch, a.num_kv_heads, max(cross_len, 1), a.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        pos=jnp.zeros((), jnp.int32),
+        ck=jnp.zeros(cshape, dtype), cv=jnp.zeros(cshape, dtype))
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def attn_apply(
+    params,
+    x: jax.Array,                    # (B, S, d_model)
+    *,
+    acfg: AttnCfg,
+    ft: FTCfg,
+    window: Optional[int] = None,    # None = global (full) attention
+    positions: Optional[jax.Array] = None,  # (S,) absolute positions
+    cache: Optional[KVCache] = None,
+    mode: str = "train",             # "train" | "prefill" | "decode"
+    kv_x: Optional[jax.Array] = None,   # cross-attention memory (B, M, d)
+    cross: bool = False,
+    fault=None,
+    mesh=None,
+    interpret: bool = True,
+) -> tuple[jax.Array, FTReport, Optional[KVCache]]:
+    b, s, _ = x.shape
+    hd, h, hkv = acfg.head_dim, acfg.num_heads, acfg.num_kv_heads
+    cfg = efta_cfg(ft)
+    cross = cross or (kv_x is not None)
+    # Tensor-parallel attention: shard heads over 'model'. GQA groups are
+    # hostile to GSPMD propagation (reshape H -> (Hkv, G) is non-divisible),
+    # so under TP we materialize repeated KV heads (Megatron practice when
+    # TP > kv_heads) and shard all of q/k/v on the padded head dim.
+    tp = (mesh is not None and "model" in mesh.shape
+          and mesh.shape["model"] > 1)
+
+    def _tp_heads(t):
+        if not tp:
+            return t
+        from repro.models.transformer import DP_AXES  # avoid cycle at import
+        dp = tuple(a for a in DP_AXES if a in mesh.shape)
+        spec = jax.sharding.PartitionSpec(dp if dp else None, "model",
+                                          None, None)
+        return jax.lax.with_sharding_constraint(
+            t, jax.sharding.NamedSharding(mesh, spec))
+
+    def _expand_kv(t):
+        if not tp or t.shape[1] == h:
+            return t
+        g = h // t.shape[1]
+        t = jnp.broadcast_to(t[:, :, None], (t.shape[0], t.shape[1], g,
+                                             t.shape[2], t.shape[3]))
+        return t.reshape(t.shape[0], h, t.shape[3], t.shape[4])
+
+    def _tp_kv(t):
+        # Decode: q is tiny (Sq=1) but the KV cache is huge — shard the KV
+        # *head* dim over 'model' (GSPMD pads kv_heads up to the axis size)
+        # instead of materializing the 7x-expanded KV. q stays replicated
+        # across 'model'; the grouped einsum runs against local kv heads.
+        if not tp:
+            return t
+        from repro.models.transformer import DP_AXES
+        dp = tuple(a for a in DP_AXES if a in mesh.shape)
+        spec = jax.sharding.PartitionSpec(dp if dp else None, "model",
+                                          None, None)
+        return jax.lax.with_sharding_constraint(
+            t, jax.sharding.NamedSharding(mesh, spec))
+
+    if positions is None:
+        base = cache.pos if (cache is not None and mode == "decode") else 0
+        positions = base + jnp.arange(s, dtype=jnp.int32)
+
+    q = _tp_heads(_split_heads(matmul(x, params["wq"], ff_abft=ft.ff_abft),
+                               h, hd))
+    if cross:
+        if cache is not None and mode == "decode":
+            k, v = cache.ck, cache.cv
+        else:
+            k = _split_heads(matmul(kv_x, params["wk"], ff_abft=ft.ff_abft), hkv, hd)
+            v = _split_heads(matmul(kv_x, params["wv"], ff_abft=ft.ff_abft), hkv, hd)
+        if acfg.pos == "rope":
+            q = rope(q.transpose(0, 2, 1, 3), positions,
+                     acfg.rope_theta).transpose(0, 2, 1, 3)
+        out, rep = attention_op(
+            q, _tp_heads(_expand_kv(k)), _tp_heads(_expand_kv(v)),
+            impl=ft.attn_impl, cfg=cfg, causal=False,
+            sm_scale=acfg.softmax_scale, fault=fault, interpret=interpret)
+        new_cache = None
+        if cache is not None and mode == "prefill":
+            new_cache = cache._replace(ck=k, cv=v)
+        y = matmul(_merge_heads(out), params["wo"], ff_abft=ft.ff_abft)
+        return y, rep, new_cache
+
+    k = _split_heads(matmul(x, params["wk"], ff_abft=ft.ff_abft), hkv, hd)
+    v = _split_heads(matmul(x, params["wv"], ff_abft=ft.ff_abft), hkv, hd)
+    if acfg.pos == "rope":
+        q = rope(q.transpose(0, 2, 1, 3), positions,
+                 acfg.rope_theta).transpose(0, 2, 1, 3)
+        k = rope(k.transpose(0, 2, 1, 3), positions,
+                 acfg.rope_theta).transpose(0, 2, 1, 3)
+
+    new_cache = None
+    if cache is None:
+        # Training / encoding: self-attention over the full sequence.
+        out, rep = attention_op(
+            q, _tp_heads(_expand_kv(k)), _tp_heads(_expand_kv(v)),
+            impl=ft.attn_impl, cfg=cfg, causal=acfg.causal,
+            window=window, sm_scale=acfg.softmax_scale, fault=fault,
+            interpret=interpret)
+    else:
+        cache_len = cache.k.shape[2]
+        slots = positions % cache_len
+        ck = cache.k.at[:, :, slots, :].set(k.astype(cache.k.dtype))
+        cv = cache.v.at[:, :, slots, :].set(v.astype(cache.v.dtype))
+        new_pos = positions[-1] + 1
+        new_cache = cache._replace(k=ck, v=cv, pos=new_pos)
+        if mode == "prefill":
+            # Attend within the prompt itself (fresh cache).
+            out, rep = attention_op(
+                q, _tp_heads(_expand_kv(k)), _tp_heads(_expand_kv(v)),
+                impl=ft.attn_impl, cfg=cfg, causal=acfg.causal,
+                window=window, sm_scale=acfg.softmax_scale, fault=fault,
+                interpret=interpret)
+        else:
+            # Decode: attend over the valid region of the (ring) cache.
+            # Each slot's absolute position is reconstructed so causal and
+            # sliding-window masks apply exactly even after wraparound.
+            slot_idx = jnp.arange(cache_len, dtype=jnp.int32)
+            last_written = new_pos - 1 - ((new_pos - 1 - slot_idx) % cache_len)
+            kv_positions = jnp.where(last_written >= 0, last_written, -1)
+            out, rep = attention_op(
+                q, _tp_kv(ck), _tp_kv(cv),
+                impl="efta" if ft.attn_impl == "efta_pallas"
+                else ft.attn_impl,
+                cfg=cfg, causal=True, window=window,
+                q_offset=positions[0], kv_positions=kv_positions,
+                sm_scale=acfg.softmax_scale, fault=fault, interpret=interpret)
+    y = matmul(_merge_heads(out), params["wo"], ff_abft=ft.ff_abft)
+    return y, rep, new_cache

@@ -1,0 +1,123 @@
+"""Shared neural-net layers (pure functional: init fns return pytrees,
+apply fns are stateless)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.abft_gemm import tensor_abft_matmul
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else (1.0 / (d_in ** 0.5))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def matmul(x, w, *, ff_abft: bool = False):
+    """Linear projection; optionally protected by tensor-checksum ABFT."""
+    if ff_abft:
+        y, _ = tensor_abft_matmul(x, w)
+        return y
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"w": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["w"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["w"].astype(jnp.float32)
+            + params["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_init(kind: str, d: int, dtype):
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def norm_apply(kind: str, params, x):
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+}
+
+
+def mlp_init(key, d: int, ff: int, dtype, *, glu: bool):
+    ks = jax.random.split(key, 3)
+    p = {"down": dense_init(ks[2], ff, d, dtype)}
+    if glu:
+        p["gate"] = dense_init(ks[0], d, ff, dtype)
+        p["up"] = dense_init(ks[1], d, ff, dtype)
+    else:
+        p["up"] = dense_init(ks[1], d, ff, dtype)
+    return p
+
+
+def mlp_apply(params, x, *, act: str, glu: bool, ff_abft: bool = False):
+    a = ACTS[act]
+    if glu:
+        h = a(matmul(x, params["gate"], ff_abft=ff_abft)) * matmul(
+            x, params["up"], ff_abft=ff_abft)
+    else:
+        h = a(matmul(x, params["up"], ff_abft=ff_abft))
+    return matmul(h, params["down"], ff_abft=ff_abft)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed_apply(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x, *, table=None):
+    t = table if table is not None else params["table"]
+    return jnp.matmul(x, t.T.astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def rope(x, positions, theta=10000.0):
+    """Rotary embedding. x: (..., S, H, D) or (..., S, D); positions: (..., S).
+    ``theta`` may be a traced scalar (per-layer rope base)."""
+    d = x.shape[-1]
+    half = d // 2
+    theta = jnp.asarray(theta, jnp.float32)
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq    # (..., S, half)
+    if x.ndim == ang.ndim + 2:                               # head dim present
+        ang = ang[..., None, :]                              # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def learned_pos_init(key, max_seq: int, d: int, dtype):
+    return {"pos": (jax.random.normal(key, (max_seq, d), jnp.float32)
+                    * 0.02).astype(dtype)}

@@ -1,0 +1,212 @@
+"""State-space sequence mixers: Mamba (selective SSM, for Hymba's parallel
+heads) and RWKV6 "Finch" (data-dependent decay).
+
+Both are attention-free: the paper's checksum ABFT has no GEMM-of-scores to
+protect here (DESIGN.md §Arch-applicability). The projection GEMMs can be
+ABFT-protected (``ff_abft``) and the recurrent state update is protected by
+range restriction in the SNVR spirit (finite-state check).
+
+Recurrences run as ``lax.scan`` over time with f32 state (compact HLO for the
+dry-run; a chunked/associative formulation is a recorded hillclimb lever).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMCfg
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM)
+# ---------------------------------------------------------------------------
+
+class MambaState(NamedTuple):
+    h: jax.Array      # (B, d_inner, N) f32
+    conv: jax.Array   # (B, K-1, d_inner) — trailing inputs for the causal conv
+
+
+def mamba_init(key, d: int, s: SSMCfg, dtype):
+    di = s.expand * d
+    dtr = s.dt_rank or -(-d // 16)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_dim, di), jnp.float32)
+                   / math.sqrt(s.conv_dim)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * s.state_dim, dtype),
+        "dt_proj": dense_init(ks[3], dtr, di, dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "A_log": jnp.log(jnp.tile(
+            jnp.arange(1, s.state_dim + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def mamba_state_init(batch: int, d: int, s: SSMCfg, dtype) -> MambaState:
+    di = s.expand * d
+    return MambaState(
+        h=jnp.zeros((batch, di, s.state_dim), jnp.float32),
+        conv=jnp.zeros((batch, s.conv_dim - 1, di), dtype))
+
+
+def _mamba_conv(xh, conv_w, conv_b, prefix):
+    """Causal depthwise conv via K shifted adds. xh: (B, S, di)."""
+    k = conv_w.shape[0]
+    full = jnp.concatenate([prefix.astype(xh.dtype), xh], axis=1)
+    s = xh.shape[1]
+    out = jnp.zeros_like(xh, dtype=jnp.float32)
+    for i in range(k):
+        out = out + full[:, i:i + s, :].astype(jnp.float32) * conv_w[i].astype(jnp.float32)
+    return (out + conv_b.astype(jnp.float32)).astype(xh.dtype)
+
+
+def mamba_apply(params, x, s: SSMCfg, *, state: MambaState | None = None):
+    """x: (B, S, d) -> (y, new_state). Selective scan over time."""
+    b, seq, d = x.shape
+    di = s.expand * d
+    dtr = params["dt_proj"].shape[0]
+    if state is None:
+        state = mamba_state_init(b, d, s, x.dtype)
+
+    xz = jnp.matmul(x, params["in_proj"], preferred_element_type=jnp.float32)
+    xh_pre, z = jnp.split(xz.astype(x.dtype), 2, axis=-1)
+    xh = jax.nn.silu(_mamba_conv(xh_pre, params["conv_w"], params["conv_b"],
+                                 state.conv))
+    # conv state carries the *pre-conv* inputs (the conv window operates on
+    # in_proj outputs, not on activated conv outputs)
+    new_conv = jnp.concatenate([state.conv.astype(x.dtype), xh_pre],
+                               axis=1)[:, -(s.conv_dim - 1):, :]
+
+    dbc = jnp.matmul(xh, params["x_proj"], preferred_element_type=jnp.float32)
+    dt_r, b_c, c_c = jnp.split(dbc, [dtr, dtr + s.state_dim], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.matmul(dt_r.astype(x.dtype), params["dt_proj"],
+                   preferred_element_type=jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))                  # (B,S,di)
+    a = -jnp.exp(params["A_log"])                                 # (di, N)
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp                                 # (B,di),(B,N),(B,N),(B,di)
+        da = jnp.exp(dt_t[..., None] * a)                         # (B,di,N)
+        h = da * h + dt_t[..., None] * b_t[:, None, :] * x_t[..., None]
+        y_t = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y_t
+
+    xs = (dt.transpose(1, 0, 2), b_c.transpose(1, 0, 2),
+          c_c.transpose(1, 0, 2), xh.astype(jnp.float32).transpose(1, 0, 2))
+    h_f, ys = jax.lax.scan(step, state.h, xs)
+    y = ys.transpose(1, 0, 2) + params["D"] * xh.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.matmul(y, params["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, MambaState(h=h_f, conv=new_conv)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch): token shift + data-dependent decay
+# ---------------------------------------------------------------------------
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array     # (B, H, hd, hd) f32
+    x_prev: jax.Array  # (B, d)  — token shift for time-mix
+    x_prev_c: jax.Array  # (B, d) — token shift for channel-mix
+
+
+def rwkv6_init(key, d: int, s: SSMCfg, dtype):
+    h = d // s.head_dim
+    lora = 64
+    ks = jax.random.split(key, 12)
+    ffd = int(3.5 * d)
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(dtype),
+        "w_base": jnp.full((d,), -2.0, jnp.float32),
+        "w_lora_a": dense_init(ks[1], d, lora, dtype),
+        "w_lora_b": (jnp.zeros((lora, d))).astype(dtype),
+        "wr": dense_init(ks[2], d, d, dtype),
+        "wk": dense_init(ks[3], d, d, dtype),
+        "wv": dense_init(ks[4], d, d, dtype),
+        "wg": dense_init(ks[5], d, d, dtype),
+        "u": (jax.random.normal(ks[6], (h, s.head_dim), jnp.float32) * 0.1),
+        "wo": dense_init(ks[7], d, d, dtype),
+        "ln_x": jnp.ones((d,), jnp.float32),
+        # channel mix
+        "mu_c": (jax.random.uniform(ks[8], (2, d), jnp.float32)).astype(dtype),
+        "wk_c": dense_init(ks[9], d, ffd, dtype),
+        "wv_c": dense_init(ks[10], ffd, d, dtype),
+        "wr_c": dense_init(ks[11], d, d, dtype),
+    }
+
+
+def rwkv_state_init(batch: int, d: int, s: SSMCfg, dtype) -> RWKVState:
+    h = d // s.head_dim
+    return RWKVState(
+        wkv=jnp.zeros((batch, h, s.head_dim, s.head_dim), jnp.float32),
+        x_prev=jnp.zeros((batch, d), dtype),
+        x_prev_c=jnp.zeros((batch, d), dtype))
+
+
+def _shifted(x, x_prev):
+    """(B,S,d) -> previous-token tensor, seeded by carry x_prev (B,d)."""
+    return jnp.concatenate([x_prev[:, None, :].astype(x.dtype),
+                            x[:, :-1, :]], axis=1)
+
+
+def rwkv6_time_mix(params, x, s: SSMCfg, *, state: RWKVState):
+    b, seq, d = x.shape
+    nh, hd = d // s.head_dim, s.head_dim
+    xs = _shifted(x, state.x_prev)
+    mu = params["mu"].astype(jnp.float32)
+    xf, xsf = x.astype(jnp.float32), xs.astype(jnp.float32)
+    def mix(i):
+        return (xf + mu[i] * (xsf - xf)).astype(x.dtype)
+    r = jnp.matmul(mix(0), params["wr"]).reshape(b, seq, nh, hd)
+    k = jnp.matmul(mix(1), params["wk"]).reshape(b, seq, nh, hd)
+    v = jnp.matmul(mix(2), params["wv"]).reshape(b, seq, nh, hd)
+    g = jnp.matmul(mix(3), params["wg"])
+    # data-dependent decay (the Finch contribution)
+    w_dd = (params["w_base"]
+            + jnp.matmul(jnp.tanh(jnp.matmul(mix(4), params["w_lora_a"])),
+                         params["w_lora_b"]).astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w_dd)).reshape(b, seq, nh, hd)           # in (0,1)
+    u = params["u"]
+
+    def step(wkv, inp):
+        r_t, k_t, v_t, w_t = [t.astype(jnp.float32) for t in inp]  # (B,nh,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]                 # (B,nh,hd,hd)
+        y_t = jnp.einsum("bhj,bhji->bhi", r_t, wkv + u[None, :, :, None] * kv)
+        wkv = w_t[..., :, None] * wkv + kv
+        return wkv, y_t
+
+    xs_scan = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+               v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    wkv_f, ys = jax.lax.scan(step, state.wkv, xs_scan)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, seq, d)
+    # group norm over heads
+    yg = y.reshape(b, seq, nh, hd)
+    yg = (yg - yg.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        yg.var(-1, keepdims=True) + 1e-5)
+    y = (yg.reshape(b, seq, d) * params["ln_x"]).astype(x.dtype)
+    y = y * jax.nn.silu(g)
+    out = jnp.matmul(y, params["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    new_state = state._replace(wkv=wkv_f, x_prev=x[:, -1, :])
+    return out, new_state
+
+
+def rwkv6_channel_mix(params, x, *, state: RWKVState):
+    xs = _shifted(x, state.x_prev_c)
+    mu = params["mu_c"].astype(jnp.float32)
+    xf, xsf = x.astype(jnp.float32), xs.astype(jnp.float32)
+    xk = (xf + mu[0] * (xsf - xf)).astype(x.dtype)
+    xr = (xf + mu[1] * (xsf - xf)).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(jnp.matmul(xk, params["wk_c"])))
+    out = jax.nn.sigmoid(jnp.matmul(xr, params["wr_c"])) * jnp.matmul(
+        kk, params["wv_c"], preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, state._replace(x_prev_c=x[:, -1, :])

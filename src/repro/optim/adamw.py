@@ -1,0 +1,86 @@
+"""AdamW from scratch — functional, sharding-transparent, with optional
+low-precision moment storage (bf16) for the 1T-class archs.
+
+Moments inherit the parameters' sharding (FSDP x TP), which is ZeRO-style
+optimizer-state sharding for free under GSPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import global_norm
+
+
+class AdamWState(NamedTuple):
+    m: object
+    v: object
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    state_dtype: Optional[str] = None   # None = same as param; "bfloat16" = low-mem
+
+    def _sdtype(self, p):
+        return jnp.dtype(self.state_dtype) if self.state_dtype else p.dtype
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self._sdtype(p))
+        return AdamWState(
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+            count=jnp.zeros((), jnp.int32))
+
+    def update(self, grads, state: AdamWState, params):
+        count = state.count + 1
+        lr = self.lr(count) if callable(self.lr) else self.lr
+        if self.clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1c = 1 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            mf = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * gf
+            vf = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * jnp.square(gf)
+            mhat = mf / b1c
+            vhat = vf / b2c
+            step = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+            return new_p, mf.astype(m.dtype), vf.astype(v.dtype)
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        new = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([t[0] for t in new])
+        new_m = treedef.unflatten([t[1] for t in new])
+        new_v = treedef.unflatten([t[2] for t in new])
+        return new_p, AdamWState(new_m, new_v, count)
+
+
+def warmup_cosine(peak: float, *, warmup: int = 100, total: int = 10000,
+                  floor: float = 0.1):
+    def schedule(step):
+        stepf = step.astype(jnp.float32)
+        warm = stepf / max(warmup, 1)
+        prog = jnp.clip((stepf - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak * jnp.where(stepf < warmup, warm, cos)
+    return schedule

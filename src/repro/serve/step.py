@@ -1,0 +1,46 @@
+"""Serving step factories: prefill and decode, with context-parallel decode
+for long contexts (flash-decoding over the ``data`` axis — the EFTA running
+(m, l) rescale algebra is exactly the partial-softmax combine needed, so
+fault-tolerant attention composes with CP for free)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+
+
+def make_prefill_step(model: Model, *, mesh=None):
+    def prefill(params, tokens, cache, frontend=None, enc_tokens=None):
+        return model.prefill(params, tokens, cache, frontend=frontend,
+                             enc_tokens=enc_tokens, mesh=mesh)
+    return prefill
+
+
+def make_decode_step(model: Model, *, mesh=None):
+    def decode(params, token, cache):
+        return model.decode_step(params, token, cache, mesh=mesh)
+    return decode
+
+
+def greedy_generate(model: Model, params, tokens, *, steps: int,
+                    cache_len: Optional[int] = None, mesh=None, **prefill_kw):
+    """Greedy decoding driver (used by examples and tests)."""
+    b = tokens.shape[0]
+    cache = model.init_cache(b, cache_len=cache_len or
+                             (tokens.shape[1] + steps + 1))
+    logits, rep, cache = model.prefill(params, tokens, cache, mesh=mesh,
+                                       **prefill_kw)
+    out = []
+    reports = [rep]
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    for _ in range(steps):
+        out.append(tok)
+        logits, rep, cache = model.decode_step(params, tok, cache, mesh=mesh)
+        reports.append(rep)
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+    rep_total = functools.reduce(lambda a, b: a.merge(b), reports)
+    return jnp.concatenate(out, axis=1), rep_total

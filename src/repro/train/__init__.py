@@ -1,0 +1,2 @@
+from repro.train.state import TrainState
+from repro.train.step import init_state, make_train_step

@@ -1,0 +1,17 @@
+"""Training state pytree."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+
+from repro.optim.adamw import AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jax.Array
+    # error-feedback residuals for compressed cross-pod gradient sync
+    # (empty dict when pod_sync="dense")
+    ef: Any = None

@@ -1,0 +1,69 @@
+"""HLO text analysis: collective-byte accounting for the roofline.
+
+``cost_analysis`` gives FLOPs and HBM bytes but not collective traffic, so we
+parse the (post-SPMD-partitioning) HLO and sum operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes per collective kind over the whole module.
+
+    Post-optimization HLO prints operands untyped (%name only), so we take
+    the result shape(s) printed between ``=`` and the op name. For all-reduce
+    result==operand; for all-gather the result is the wire-received volume;
+    for reduce-scatter this undercounts by the group factor (noted).
+
+    NOTE: ops inside ``while`` bodies are counted once; callers that need
+    per-iteration accounting extrapolate via layer probes (launch/dryrun.py).
+    """
+    out: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "-done." in line:  # async pairs: count starts
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        eq = line.find("=")
+        if eq < 0 or eq > m.start():
+            continue
+        kind = m.group(1)
+        total = 0
+        for sm in _SHAPE_RE.finditer(line[eq:m.start()]):
+            total += _shape_bytes(sm.group(1), sm.group(2))
+        out[kind] += total
+    return dict(out)
+
+
+def count_ops(hlo_text: str, names=("fusion", "custom-call", "while",
+                                    "dot", "convolution")) -> dict[str, int]:
+    counts = {}
+    for n in names:
+        counts[n] = len(re.findall(rf"\b{n}\(", hlo_text))
+    return counts

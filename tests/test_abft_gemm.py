@@ -1,0 +1,38 @@
+"""ABFT-protected linear layers: traditional vs tensor-checksum variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FaultSpec, Site, abft_matmul, tensor_abft_matmul
+
+
+@pytest.mark.parametrize("fn", [abft_matmul, tensor_abft_matmul])
+@pytest.mark.parametrize("m,k,n", [(8, 64, 128), (16, 32, 64), (4, 16, 24)])
+def test_no_fault_identity(fn, m, k, n):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    y, nd = fn(x, w)
+    np.testing.assert_allclose(y, x @ w, atol=1e-4)
+    assert int(nd) == 0
+
+
+@pytest.mark.parametrize("fn", [abft_matmul, tensor_abft_matmul])
+def test_fault_corrected(fn):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
+    f = FaultSpec.single(Site.GEMM1, row=3, col=77, bit=25)
+    y, nd = fn(x, w, fault=f)
+    assert int(nd) == 1
+    np.testing.assert_allclose(y, x @ w, atol=1e-4)
+
+
+def test_bf16_thresholds_no_false_positive():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((32, 256)), jnp.bfloat16)
+    w = jnp.asarray(rng.standard_normal((256, 512)), jnp.bfloat16)
+    for fn in (abft_matmul, tensor_abft_matmul):
+        _, nd = fn(x, w)
+        assert int(nd) == 0

@@ -1,0 +1,108 @@
+"""Property tests for the tensor-checksum algebra (paper §4.1)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import checksum as cks
+
+jax.config.update("jax_enable_x64", False)
+
+
+def arrays(rows, width, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((rows, width)), jnp.float32)
+
+
+@given(st.integers(1, 6), st.sampled_from([8, 16, 32]), st.integers(2, 6),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_fold_identity(rows, stride, g, seed):
+    """fold1/fold2 are linear strided folds; reconstructable from segments."""
+    x = arrays(rows, stride * g, seed)
+    f1 = cks.fold1(x, stride)
+    f2 = cks.fold2(x, stride)
+    segs = x.reshape(rows, g, stride)
+    np.testing.assert_allclose(f1, segs.sum(1), rtol=1e-5, atol=1e-5)
+    w = np.arange(1, g + 1, dtype=np.float32)[:, None]
+    np.testing.assert_allclose(f2, (np.asarray(segs) * w).sum(1),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([8, 16]), st.integers(2, 5))
+@settings(max_examples=25, deadline=None)
+def test_abft_gemm_identity(seed, stride, g):
+    """Q @ encode(K).T == fold(Q @ K.T): the core ABFT invariant."""
+    rng = np.random.default_rng(seed)
+    d, bc = 16, stride * g
+    q = jnp.asarray(rng.standard_normal((8, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((bc, d)), jnp.float32)
+    checks = cks.encode_kv(k, stride)
+    s = q @ k.T
+    np.testing.assert_allclose(q @ checks.c1.T, cks.fold1(s, stride),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(q @ checks.c2.T, cks.fold2(s, stride),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, 7), st.integers(0, 3),
+       st.floats(2.0, 100.0))
+@settings(max_examples=40, deadline=None)
+def test_single_error_located_and_corrected(seed, row, fold_col, magnitude):
+    """Any single injected error above the (relative) threshold is exactly
+    corrected. threshold=0.05 relative: detection bound is 0.05*max(|c1|,1),
+    well below the injected magnitude >= 2 for N(0,1) folds of 4."""
+    stride, g, rows = 4, 4, 8
+    x = arrays(rows, stride * g, seed)
+    checks = cks.Checksums(cks.fold1(x, stride), cks.fold2(x, stride))
+    seg = seed % g
+    col = seg * stride + fold_col % stride
+    x_bad = x.at[row, col].add(magnitude)
+    verdict = cks.verify_and_correct(x_bad, checks, stride, threshold=0.05)
+    assert int(verdict.n_detected) == 1
+    np.testing.assert_allclose(verdict.corrected, x, rtol=1e-4, atol=1e-4)
+
+
+def test_no_false_positives_bf16():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((64, 128)), jnp.bfloat16)
+    q = jnp.asarray(rng.standard_normal((32, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((128, 64)), jnp.bfloat16)
+    checks = cks.encode_kv(k, 8)
+    s = jnp.matmul(q, k.T, preferred_element_type=jnp.float32)
+    c1 = jnp.matmul(q, checks.c1.T, preferred_element_type=jnp.float32)
+    c2 = jnp.matmul(q, checks.c2.T, preferred_element_type=jnp.float32)
+    verdict = cks.verify_and_correct(s, cks.Checksums(c1, c2), 8,
+                                     threshold=0.5)
+    assert int(verdict.n_detected) == 0
+
+
+def test_traditional_abft_roundtrip():
+    rng = np.random.default_rng(1)
+    c = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
+    rc = cks.traditional_encode_cols(c)  # exact row checksums of c itself
+    bad = c.at[3, 17].add(7.5)
+    verdict = cks.traditional_verify_correct(
+        bad, rc, threshold=0.5)
+    assert int(verdict.n_detected) == 1
+    np.testing.assert_allclose(verdict.corrected, c, atol=1e-4)
+
+
+def test_interleaved_multi_error_advantage():
+    """Two errors in one row are corrected iff not aliased at the stride —
+    the paper's up-to-8x (here 4x) coverage argument."""
+    stride, g = 4, 4
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((4, stride * g)), jnp.float32)
+    checks = cks.Checksums(cks.fold1(x, stride), cks.fold2(x, stride))
+    # different fold columns -> both corrected
+    bad = x.at[1, 2].add(5.0).at[1, 7].add(3.0)  # cols 2 and 3 of folds
+    v = cks.verify_and_correct(bad, checks, stride, threshold=0.25)
+    np.testing.assert_allclose(v.corrected, x, atol=1e-4)
+    # same fold column (aliased at stride): NOT correctable (documented limit)
+    bad2 = x.at[1, 2].add(5.0).at[1, 2 + stride].add(3.0)
+    v2 = cks.verify_and_correct(bad2, checks, stride, threshold=0.25)
+    assert not np.allclose(v2.corrected, x, atol=1e-3)

@@ -1,0 +1,27 @@
+"""Data pipeline: determinism + resume-by-step semantics."""
+import numpy as np
+
+from repro.data import DataConfig, SyntheticLM
+
+
+def test_deterministic_by_step():
+    d1 = SyntheticLM(DataConfig(vocab_size=64, seq_len=16, global_batch=4))
+    d2 = SyntheticLM(DataConfig(vocab_size=64, seq_len=16, global_batch=4))
+    b1, b2 = d1.batch(7), d2.batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(d1.batch(8)["tokens"], b1["tokens"])
+
+
+def test_targets_are_shifted_tokens():
+    d = SyntheticLM(DataConfig(vocab_size=64, seq_len=16, global_batch=2))
+    b = d.batch(0)
+    assert b["tokens"].shape == (2, 16) and b["targets"].shape == (2, 16)
+    # learnable structure: repeats/progressions -> low entropy
+    assert (b["tokens"] >= 0).all() and (b["tokens"] < 64).all()
+
+
+def test_frontend_stub():
+    d = SyntheticLM(DataConfig(vocab_size=64, seq_len=8, global_batch=2,
+                               frontend_tokens=5, d_model=16))
+    b = d.batch(0)
+    assert b["frontend"].shape == (2, 5, 16)

@@ -1,0 +1,137 @@
+"""EFTA core: equivalence with naive attention + fault injection coverage."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EFTAConfig, FaultSpec, Site, efta_attention,
+                        reference_attention)
+
+CFG = EFTAConfig(mode="correct", stride=8, block_kv=16)
+
+
+def qkv(b=2, h=4, hkv=2, s=64, d=32, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (b, h, s, d), dtype),
+            jax.random.normal(ks[1], (b, hkv, s, d), dtype),
+            jax.random.normal(ks[2], (b, hkv, s, d), dtype))
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matches_reference(causal, dtype):
+    q, k, v = qkv(dtype=dtype)
+    out, rep = efta_attention(q, k, v, cfg=CFG, causal=causal)
+    ref = reference_attention(q, k, v, causal=causal)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+    assert int(rep.detected.sum()) == 0  # no false positives
+
+
+@pytest.mark.parametrize("s,d,block", [(32, 16, 8), (64, 32, 32), (96, 64, 32),
+                                       (128, 16, 128)])
+def test_shape_sweep(s, d, block):
+    cfg = EFTAConfig(mode="correct", stride=8, block_kv=block)
+    q, k, v = qkv(s=s, d=d)
+    out, _ = efta_attention(q, k, v, cfg=cfg)
+    ref = reference_attention(q, k, v)
+    np.testing.assert_allclose(out, ref, atol=3e-6)
+
+
+def test_window_and_ragged():
+    q, k, v = qkv()
+    out, _ = efta_attention(q, k, v, cfg=CFG, causal=True, window=24)
+    ref = reference_attention(q, k, v, causal=True, window=24)
+    np.testing.assert_allclose(out, ref, atol=2e-6)
+    out2, _ = efta_attention(q, k, v, cfg=CFG, kv_len=jnp.int32(37))
+    ref2 = reference_attention(q, k, v, kv_len=37)
+    np.testing.assert_allclose(out2, ref2, atol=2e-6)
+
+
+def test_kv_positions_ring_cache():
+    """kv_positions reconstructs masks for wrapped ring caches."""
+    q, k, v = qkv(s=32)
+    q1 = q[:, :, -1:, :]
+    # pretend k/v slots hold positions [32..63] shuffled by ring wrap
+    perm = (jnp.arange(32) + 11) % 32
+    kv_pos = 32 + jnp.argsort(perm)  # position stored in each slot
+    k_r = k[:, :, perm, :]
+    v_r = v[:, :, perm, :]
+    # equivalent unwrapped computation
+    ref = reference_attention(q1, k, v, causal=True, q_offset=63,
+                              kv_positions=jnp.arange(32) + 32)
+    out, _ = efta_attention(q1, k_r, v_r, cfg=CFG, causal=True, q_offset=63,
+                            kv_positions=kv_pos)
+    np.testing.assert_allclose(out, ref, atol=2e-6)
+
+
+@pytest.mark.parametrize("site", [Site.GEMM1, Site.EXP, Site.ROWMAX,
+                                  Site.ROWSUM, Site.GEMM2])
+def test_fault_corrected(site):
+    q, k, v = qkv()
+    ref = reference_attention(q, k, v)
+    f = FaultSpec.single(site, block=1, batch=0, head=1, row=5, col=3, bit=26)
+    out, rep = efta_attention(q, k, v, cfg=CFG, fault=f)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    assert err < 1e-4, f"{site.name}: corrected err {err}"
+    if site != Site.ROWMAX:
+        assert int(rep.detected.sum()) >= 1 or site == Site.ROWMAX
+
+
+def test_fault_uncorrected_does_damage():
+    """Sanity: without FT the same fault visibly corrupts the output."""
+    q, k, v = qkv()
+    ref = reference_attention(q, k, v)
+    f = FaultSpec.single(Site.GEMM2, block=1, batch=0, head=1, row=5,
+                         col=3, bit=28)
+    off = EFTAConfig(mode="off", stride=8, block_kv=16)
+    out, _ = efta_attention(q, k, v, cfg=off, fault=f)
+    assert float(jnp.max(jnp.abs(out - ref))) > 1e-2
+
+
+def test_detect_mode_counts_but_does_not_fix():
+    q, k, v = qkv()
+    ref = reference_attention(q, k, v)
+    f = FaultSpec.single(Site.GEMM1, block=0, batch=0, head=0, row=1,
+                         col=2, bit=27)
+    det = EFTAConfig(mode="detect", stride=8, block_kv=16)
+    out, rep = efta_attention(q, k, v, cfg=det, fault=f)
+    assert int(rep.detected.sum()) >= 1
+    assert int(rep.corrected.sum()) == 0
+    assert float(jnp.max(jnp.abs(out - ref))) > 1e-4
+
+
+def test_paper_mode_rowsum_approximation():
+    """shadow_rowsum=False reproduces the paper's analytic fallback: detected
+    and bounded, but only approximately corrected."""
+    q, k, v = qkv()
+    ref = reference_attention(q, k, v)
+    cfg = EFTAConfig(mode="correct", stride=8, block_kv=16,
+                     shadow_rowsum=False)
+    f = FaultSpec.single(Site.ROWSUM, block=1, batch=0, head=1, row=5,
+                         col=0, bit=26)
+    out, rep = efta_attention(q, k, v, cfg=cfg, fault=f)
+    assert int(rep.detected[3]) >= 1
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_gqa_grouping():
+    q, k, v = qkv(h=8, hkv=2)
+    out, _ = efta_attention(q, k, v, cfg=CFG)
+    ref = reference_attention(q, k, v)
+    np.testing.assert_allclose(out, ref, atol=2e-6)
+
+
+def test_differentiable():
+    q, k, v = qkv()
+    g = jax.grad(lambda q: efta_attention(q, k, v, cfg=CFG)[0].sum())(q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_decode_offset():
+    q, k, v = qkv()
+    q1 = q[:, :, -1:, :]
+    out, _ = efta_attention(q1, k, v, cfg=CFG, causal=True, q_offset=63)
+    ref = reference_attention(q1, k, v, causal=True, q_offset=63)
+    np.testing.assert_allclose(out, ref, atol=2e-6)

@@ -1,0 +1,68 @@
+"""FT runtime: checkpoint roundtrip + reshard, straggler + fault monitors,
+elastic re-mesh planning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ft_runtime import (AsyncCheckpointer, FaultRateMonitor,
+                              MeshPlan, StragglerMonitor, latest_step,
+                              plan_mesh, restore, save)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    save(tmp_path / "step_5", tree, step=5, extra={"note": "x"})
+    out, step, extra = restore(tmp_path / "step_5", tree)
+    assert step == 5 and extra["note"] == "x"
+    np.testing.assert_array_equal(out["a"], tree["a"])
+
+
+def test_checkpoint_atomic_and_latest(tmp_path):
+    t1 = {"a": jnp.zeros((2,))}
+    save(tmp_path / "step_1", t1, step=1)
+    save(tmp_path / "step_3", t1, step=3)
+    assert latest_step(tmp_path).name == "step_3"
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer()
+    tree = {"w": jnp.ones((128, 128))}
+    ck.save_async(tmp_path / "step_2", tree, step=2)
+    ck.wait()
+    out, step, _ = restore(tmp_path / "step_2", tree)
+    assert step == 2
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save(tmp_path / "s", {"a": jnp.zeros((2,))}, step=0)
+    with pytest.raises(ValueError):
+        restore(tmp_path / "s", {"a": jnp.zeros((3,))})
+
+
+def test_straggler_monitor():
+    m = StragglerMonitor(window=20, k=6.0, warmup=5)
+    for _ in range(10):
+        m.observe(0.1)
+    v = m.observe(5.0)
+    assert v.is_straggler
+    v2 = m.observe(0.11)
+    assert not v2.is_straggler
+
+
+def test_fault_rate_monitor_escalates():
+    f = FaultRateMonitor(window=30, sustained_threshold=0.2)
+    assert f.observe(0) == "ok"
+    assert f.observe(1) == "corrected"
+    for _ in range(25):
+        f.observe(1)
+    assert f.observe(1) == "cordon"
+
+
+def test_elastic_plan():
+    p = plan_mesh(512, model_parallel=16)
+    assert p.shape == (2, 16, 16)
+    p2 = plan_mesh(240, model_parallel=16)   # one host lost from a 256 pod
+    assert p2.shape == (15, 16) and p2.dropped_devices == 0
+    assert plan_mesh(8, model_parallel=16) is None

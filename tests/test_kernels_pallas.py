@@ -1,0 +1,79 @@
+"""Pallas EFTA kernel vs pure-jnp oracle (interpret mode), shape/dtype sweep
+plus in-kernel fault injection at every site."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EFTAConfig
+from repro.kernels import efta_attention_pallas
+from repro.kernels.ref import attention_ref
+
+
+def qkv(b, h, hkv, s, d, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (b, h, s, d), dtype),
+            jax.random.normal(ks[1], (b, hkv, s, d), dtype),
+            jax.random.normal(ks[2], (b, hkv, s, d), dtype))
+
+
+SWEEP = [
+    # (b, h, hkv, s, d, block_q, block_kv, stride)
+    (1, 2, 2, 128, 32, 64, 64, 8),
+    (2, 4, 2, 256, 64, 128, 128, 8),
+    (1, 4, 1, 256, 128, 128, 256, 128),
+    (1, 2, 2, 512, 64, 128, 128, 16),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,s,d,bq,bkv,stride", SWEEP)
+def test_kernel_vs_oracle(b, h, hkv, s, d, bq, bkv, stride, dtype):
+    q, k, v = qkv(b, h, hkv, s, d, dtype)
+    cfg = EFTAConfig(mode="correct", stride=stride, block_kv=bkv)
+    out, det = efta_attention_pallas(q, k, v, cfg=cfg, block_q=bq)
+    ref = attention_ref(q, k, v)
+    tol = 2e-6 if dtype == jnp.float32 else 2.5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+    assert int(det.sum()) == 0
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 96),
+                                           (False, None)])
+def test_kernel_masks(causal, window):
+    q, k, v = qkv(1, 2, 2, 256, 32, jnp.float32)
+    cfg = EFTAConfig(mode="correct", stride=8, block_kv=64)
+    out, _ = efta_attention_pallas(q, k, v, cfg=cfg, causal=causal,
+                                   window=window, block_q=64)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, ref, atol=2e-6)
+
+
+@pytest.mark.parametrize("site", [0, 1, 2, 3, 4])
+def test_kernel_fault_injection(site):
+    q, k, v = qkv(1, 4, 2, 256, 64, jnp.float32)
+    cfg = EFTAConfig(mode="correct", stride=8, block_kv=128)
+    ref = attention_ref(q, k, v)
+    fault = jnp.array([site, 1, 2, 130, 21, 27, 1, 0], jnp.int32)
+    out, det = efta_attention_pallas(q, k, v, cfg=cfg, fault=fault,
+                                     block_q=128)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    assert err < 5e-3, f"site {site}: err {err}"
+
+
+def test_kernel_off_mode_is_plain_flash():
+    q, k, v = qkv(1, 2, 2, 256, 32, jnp.float32)
+    cfg = EFTAConfig(mode="off", stride=8, block_kv=64)
+    out, det = efta_attention_pallas(q, k, v, cfg=cfg, block_q=64)
+    np.testing.assert_allclose(out, attention_ref(q, k, v), atol=2e-6)
+    assert int(det.sum()) == 0
+
+
+def test_kernel_unified_vs_stepwise():
+    q, k, v = qkv(1, 2, 2, 256, 32, jnp.float32)
+    for unified in (True, False):
+        cfg = EFTAConfig(mode="correct", stride=8, block_kv=64,
+                         unified=unified)
+        out, _ = efta_attention_pallas(q, k, v, cfg=cfg, block_q=64)
+        np.testing.assert_allclose(out, attention_ref(q, k, v), atol=2e-6)
