@@ -1,0 +1,87 @@
+"""Serve-engine throughput: tokens/s vs batch size, FT on/off, against the
+seed's per-token Python loop (``greedy_generate``, unjitted dispatch per
+step) — the jitted fixed-shape batched decode must win at batch >= 4.
+
+CPU-host caveat (benchmarks/common.py): absolute numbers are not TPU-scale;
+the *ratios* (engine vs python loop, FT on vs off) are the metric.
+
+  PYTHONPATH=src python -m benchmarks.bench_serve_throughput [--gen 16]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import ServeEngine, greedy_generate
+
+PROMPT_LEN = 16
+BATCHES = (1, 2, 4, 8)
+
+
+def _python_loop_tokens_per_s(model, params, prompts, gen: int) -> float:
+    t0 = time.perf_counter()
+    out, _ = greedy_generate(model, params, prompts, steps=gen)
+    jax.block_until_ready(out)
+    return out.size / (time.perf_counter() - t0)
+
+
+def _engine_tokens_per_s(model, params, prompts, gen: int) -> float:
+    n = prompts.shape[0]
+    # warm and time the SAME instance: each engine owns its own jax.jit of a
+    # bound method, so a throwaway warm-up engine would not warm this one
+    eng = ServeEngine(model, params, n_slots=n, cache_len=64)
+    for row in np.asarray(prompts):
+        eng.submit(row, max_new_tokens=2)
+    eng.run()  # compiles prefill bucket + decode outside the timed region
+    tokens_before = eng.stats.tokens
+    for row in np.asarray(prompts):
+        eng.submit(row, max_new_tokens=gen)
+    t0 = time.perf_counter()
+    eng.run()
+    return (eng.stats.tokens - tokens_before) / (time.perf_counter() - t0)
+
+
+def run(gen: int = 16) -> list[dict]:
+    rows = []
+    base = get_config("gpt2-smoke")
+    rng = np.random.default_rng(0)
+    print("# serve throughput: tokens/s, gpt2-smoke, "
+          f"prompt={PROMPT_LEN} gen={gen}")
+    print("batch,ft,python_loop_tok_s,engine_tok_s,speedup")
+    for ft_mode in ("correct", "off"):
+        cfg = dataclasses.replace(
+            base, ft=dataclasses.replace(base.ft, mode=ft_mode))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        for b in BATCHES:
+            prompts = jnp.asarray(rng.integers(
+                0, cfg.vocab_size, (b, PROMPT_LEN)), jnp.int32)
+            loop = _python_loop_tokens_per_s(model, params, prompts, gen)
+            engine = _engine_tokens_per_s(model, params, prompts, gen)
+            speedup = engine / loop
+            rows.append({"batch": b, "ft": ft_mode, "loop": loop,
+                         "engine": engine, "speedup": speedup})
+            print(f"{b},{ft_mode},{loop:.1f},{engine:.1f},{speedup:.2f}x",
+                  flush=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    rows = run(gen=args.gen)
+    worst = min(r["speedup"] for r in rows if r["batch"] >= 4)
+    print(f"# worst batch>=4 speedup: {worst:.2f}x "
+          f"({'OK' if worst > 1 else 'REGRESSION'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,50 +2,19 @@
 injected into attention of a small transformer during inference; we measure
 silent-corruption rates with EFTA off/detect/correct.
 
+The campaign machinery lives in ``repro.core.campaign`` and is shared with
+the deterministic tier-1 test (``tests/test_fault_campaign.py``).
+
   PYTHONPATH=src python examples/fault_injection_campaign.py [n_trials]
 """
-import dataclasses
-import functools
 import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import EFTAConfig, FaultSpec, Site
-from repro.core.efta import efta_attention, reference_attention
+from repro.core import run_campaign
 
 N = int(sys.argv[1]) if len(sys.argv) > 1 else 40
-B, H, S, D = 1, 4, 128, 32
-ks = jax.random.split(jax.random.PRNGKey(0), 3)
-q = jax.random.normal(ks[0], (B, H, S, D))
-k = jax.random.normal(ks[1], (B, H, S, D))
-v = jax.random.normal(ks[2], (B, H, S, D))
-ref = reference_attention(q, k, v)
-rng = np.random.default_rng(1)
-SITES = [Site.GEMM1, Site.EXP, Site.ROWMAX, Site.ROWSUM, Site.GEMM2]
 
-for mode in ("off", "correct"):
-    cfg = EFTAConfig(mode=mode, stride=8, block_kv=32)
-    fn = jax.jit(functools.partial(efta_attention, cfg=cfg))
-    silent = detected = harmless = 0
-    worst = 0.0
-    for _ in range(N):
-        f = FaultSpec.single(
-            SITES[int(rng.integers(0, len(SITES)))],
-            block=int(rng.integers(0, S // 32)), batch=0,
-            head=int(rng.integers(0, H)), row=int(rng.integers(0, S)),
-            col=int(rng.integers(0, S)), bit=int(rng.integers(16, 31)))
-        out, rep = fn(q, k, v, fault=f)
-        err = float(jnp.max(jnp.abs(out - ref)))
-        det = int(np.sum(np.asarray(rep.detected))) > 0
-        if err < 1e-3:
-            harmless += 1
-        elif det:
-            detected += 1
-        else:
-            silent += 1
-        worst = max(worst, err)
-    print(f"mode={mode:8s} trials={N} harmless={harmless} "
-          f"caught={detected} SILENT={silent} worst_residual={worst:.2e}")
+for mode in ("off", "detect", "correct"):
+    result = run_campaign(mode=mode, n_trials=N, seed=1)
+    print(result.format_table())
+    print()
 print("EFTA turns silent corruptions into detected (and corrected) events.")

@@ -36,5 +36,7 @@ print(f"max error WITH EFTA   : {err_p:.2e}")
 print(f"max error WITHOUT FT  : {err_u:.2e}")
 print(f"detected  [gemm1, exp, rowmax, rowsum, gemm2]: {report.detected}")
 print(f"corrected [gemm1, exp, rowmax, rowsum, gemm2]: {report.corrected}")
-assert err_p < 1e-4 and err_u > 1e-2
+# unprotected: visible corruption (~1e-3 for this bit/row after softmax
+# normalization); protected: numerical noise, >3 orders of magnitude better
+assert err_p < 1e-4 and err_u > 1e-3 and err_u > 1000 * err_p
 print("OK: the SEU was detected and corrected inside the fused attention.")

@@ -15,3 +15,5 @@ from repro.core.efta import EFTAConfig, FTReport, efta_attention, efta_mha, refe
 from repro.core.decoupled import decoupled_ft_attention, decoupled_memory_bytes
 from repro.core.abft_gemm import abft_matmul, tensor_abft_matmul
 from repro.core.fault import FaultSpec, Site, inject, random_fault
+from repro.core.campaign import (CampaignResult, SiteTally, DEFAULT_SITES,
+                                 run_campaign)

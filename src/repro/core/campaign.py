@@ -1,0 +1,122 @@
+"""Randomized SEU injection campaigns over EFTA attention (paper §5.3).
+
+Shared between ``examples/fault_injection_campaign.py`` and the deterministic
+tier-1 campaign test: inject N random single-bit faults across the paper's
+attention sites and classify every trial against the fault-free oracle as
+
+  * ``harmless``  — output unchanged within tolerance (low bit / masked slot,
+                    or the site cancels analytically, e.g. ROWMAX Case 1)
+  * ``corrected`` — detected and repaired (output back within tolerance)
+  * ``detected``  — detected but visibly corrupted (detect-only modes)
+  * ``silent``    — corrupted with no detection (the failure mode EFTA
+                    exists to eliminate)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.efta import EFTAConfig, efta_attention, reference_attention
+from repro.core.fault import FaultSpec, Site, random_fault
+
+DEFAULT_SITES = (Site.GEMM1, Site.EXP, Site.ROWMAX, Site.ROWSUM, Site.GEMM2)
+
+
+@dataclasses.dataclass
+class SiteTally:
+    trials: int = 0
+    harmless: int = 0
+    corrected: int = 0
+    detected: int = 0
+    silent: int = 0
+    worst_residual: float = 0.0
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    mode: str
+    n_trials: int
+    per_site: Dict[Site, SiteTally]
+    worst_residual: float = 0.0
+
+    @property
+    def totals(self) -> SiteTally:
+        t = SiteTally()
+        for s in self.per_site.values():
+            t.trials += s.trials
+            t.harmless += s.harmless
+            t.corrected += s.corrected
+            t.detected += s.detected
+            t.silent += s.silent
+            t.worst_residual = max(t.worst_residual, s.worst_residual)
+        return t
+
+    def format_table(self) -> str:
+        rows = [f"mode={self.mode}  trials={self.n_trials}  "
+                f"worst_residual={self.worst_residual:.2e}"]
+        hdr = f"  {'site':8s} {'trials':>6s} {'harmless':>8s} " \
+              f"{'corrected':>9s} {'detected':>8s} {'SILENT':>7s}"
+        rows.append(hdr)
+        for site, t in sorted(self.per_site.items(), key=lambda kv: kv[0]):
+            rows.append(f"  {site.name:8s} {t.trials:6d} {t.harmless:8d} "
+                        f"{t.corrected:9d} {t.detected:8d} {t.silent:7d}")
+        return "\n".join(rows)
+
+
+def run_campaign(
+    *,
+    mode: str = "correct",
+    n_trials: int = 50,
+    seed: int = 0,
+    shape_bhsd: Tuple[int, int, int, int] = (1, 4, 128, 32),
+    block_kv: int = 32,
+    stride: int = 8,
+    sites: Sequence[Site] = DEFAULT_SITES,
+    bit_range: Tuple[int, int] = (16, 30),
+    tol: float = 1e-3,
+    cfg: Optional[EFTAConfig] = None,
+) -> CampaignResult:
+    """Run a seeded SEU campaign against a fixed random attention problem."""
+    b, h, s, d = shape_bhsd
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d))
+    k = jax.random.normal(ks[1], (b, h, s, d))
+    v = jax.random.normal(ks[2], (b, h, s, d))
+    ref = np.asarray(reference_attention(q, k, v), np.float32)
+    cfg = cfg or EFTAConfig(mode=mode, stride=stride, block_kv=block_kv)
+    fn = jax.jit(functools.partial(efta_attention, cfg=cfg))
+    rng = np.random.default_rng(seed + 1)
+
+    result = CampaignResult(mode=mode, n_trials=n_trials,
+                            per_site={site: SiteTally() for site in sites})
+    n_blocks = max(s // block_kv, 1)
+    for _ in range(n_trials):
+        spec = random_fault(rng, sites=sites, shape_bhsc=(b, h, s, s),
+                            n_blocks=n_blocks, max_bit=bit_range[1])
+        # random_fault samples bits uniformly in [0, max_bit]; re-draw the
+        # bit into the campaign's range (high bits = visible corruptions).
+        bit = int(rng.integers(bit_range[0], bit_range[1] + 1))
+        spec = spec._replace(bit=jnp.asarray([bit], jnp.int32))
+        site = Site(int(spec.site[0]))
+        out, rep = fn(q, k, v, fault=spec)
+        err = float(np.max(np.abs(np.asarray(out, np.float32) - ref)))
+        det = int(np.sum(np.asarray(rep.detected))) > 0
+        t = result.per_site[site]
+        t.trials += 1
+        t.worst_residual = max(t.worst_residual, err)
+        result.worst_residual = max(result.worst_residual, err)
+        if err < tol:
+            if det:
+                t.corrected += 1
+            else:
+                t.harmless += 1
+        elif det:
+            t.detected += 1
+        else:
+            t.silent += 1
+    return result

@@ -133,7 +133,9 @@ def verify_and_correct(
     # false-positives and an absolute threshold can't fit all fold widths.
     c1f = jnp.abs(checks.c1.astype(jnp.float32))
     floor = jnp.maximum(jnp.mean(c1f), 1e-6)
-    bad = jnp.abs(d1) > threshold * jnp.maximum(c1f, floor)
+    # negated-<= form so a NaN/inf delta (exponent-bit corruption that blew
+    # up the fold) counts as detected rather than comparing False
+    bad = ~(jnp.abs(d1) <= threshold * jnp.maximum(c1f, floor))
     n_detected = bad.sum(dtype=jnp.int32)
     max_delta = jnp.max(jnp.abs(d1)) if d1.size else jnp.float32(0)
     if not correct:
@@ -221,7 +223,7 @@ def traditional_verify_correct(
     d2 = row_checks[..., 1].astype(jnp.float32) - s2
     c1f = jnp.abs(row_checks[..., 0].astype(jnp.float32))
     floor = jnp.maximum(jnp.mean(c1f), 1e-6)
-    bad = jnp.abs(d1) > threshold * jnp.maximum(c1f, floor)
+    bad = ~(jnp.abs(d1) <= threshold * jnp.maximum(c1f, floor))  # NaN-safe
     n_detected = bad.sum(dtype=jnp.int32)
     max_delta = jnp.max(jnp.abs(d1)) if d1.size else jnp.float32(0)
     if not correct:

@@ -40,6 +40,30 @@ from repro.core.fault import FaultSpec, Site, inject
 MASK_VALUE = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
+# optimization_barrier defeats CSE so the shadow (DMR) accumulators are
+# genuinely redundant computations on real hardware — but this jax version
+# ships the primitive without batching or differentiation rules, which breaks
+# vmap (the serve engine's batched decode) and jax.grad (training). Both
+# rules are mathematically trivial: the barrier is the identity function, so
+# batching keeps the batch axis and the JVP passes tangents through.
+from jax.interpreters import batching as _batching  # noqa: E402
+
+if jax.lax.optimization_barrier_p not in _batching.primitive_batchers:
+    def _ob_batch(args, dims):
+        return jax.lax.optimization_barrier_p.bind(*args), dims
+    _batching.primitive_batchers[jax.lax.optimization_barrier_p] = _ob_batch
+
+
+@jax.custom_jvp
+def _shadow_barrier(x):
+    return jax.lax.optimization_barrier(x)
+
+
+@_shadow_barrier.defjvp
+def _shadow_barrier_jvp(primals, tangents):
+    return _shadow_barrier(primals[0]), tangents[0]
+
+
 @dataclasses.dataclass(frozen=True)
 class EFTAConfig:
     """Fault-tolerance + tiling configuration for EFTA."""
@@ -306,7 +330,7 @@ def efta_attention(
             # Recompute-compare on the (cheap) rowmax recurrence: protects
             # against fp overflow from an understated max, which the paper's
             # analytic-cancellation argument (Case 1) does not cover.
-            m_chk = jnp.maximum(jax.lax.optimization_barrier(m_prev), blockmax)
+            m_chk = jnp.maximum(_shadow_barrier(m_prev), blockmax)
             bad_m = m_new != m_chk
             rep = FTReport(
                 rep.detected.at[2].add(bad_m.sum(dtype=jnp.int32)),
@@ -349,11 +373,20 @@ def efta_attention(
                 rep.max_delta.at[1].max(delta_exp),
             )
         if ft and cfg.shadow_rowmax and correct:
-            # NVR range restriction on P itself: probabilities are <= 1 by
-            # construction (safe because shadow_rowmax keeps m exact). Bounds
-            # the damage of high-bit EXP corruptions on denormal entries that
-            # slip past the (underflow-limited) product check.
-            p_raw = jnp.minimum(p_raw, 1.0)
+            # Exact recompute backstop (beyond-paper): EXP corruptions whose
+            # fold product underflows (g_kv segments of e^{s-m} reach 0 in
+            # f32) slip past the product check; recomputing e^{s-m} and
+            # compare-and-selecting restores them exactly. The correction
+            # path above already materializes this recompute, so the backstop
+            # adds one compare+select. Safe only with shadow_rowmax (m is
+            # exact); subsumes the previous NVR clamp P <= 1.
+            recheck = jnp.exp(jnp.minimum(s_ij - m_sub[..., None], cap))
+            slipped = p_raw != recheck
+            n_slip = slipped.sum(dtype=jnp.int32)
+            p_raw = jnp.where(slipped, recheck, p_raw)
+            rep = FTReport(rep.detected.at[1].add(n_slip),
+                           rep.corrected.at[1].add(n_slip),
+                           rep.max_delta)
         p = jnp.where(bm, p_raw, 0.0)
 
         # --- rescale + ROWSUM (SNVR tracker r: Σ_k e^{m_k - m}) ------------
@@ -363,7 +396,7 @@ def efta_attention(
         l_new = inject(l_new, fault, Site.ROWSUM, blk_idx)
         if ft and cfg.shadow_rowsum:
             # Redundant accumulation (barrier defeats CSE on real hardware).
-            row_sh = jnp.sum(jax.lax.optimization_barrier(p), axis=-1)
+            row_sh = jnp.sum(_shadow_barrier(p), axis=-1)
             lsh_new = alpha * lsh_prev + row_sh
         else:
             lsh_new = lsh_prev
@@ -444,6 +477,19 @@ def efta_attention(
 
     # --- unified verification of GEMM II + rescale + normalization ---------
     if ft:
+        if correct:
+            # NVR range restriction on the normalized output: O/l is a
+            # convex combination of V rows, so |o_norm| <= max|V|. Zeroing
+            # violations (incl. NaN/inf from exponent-bit accumulator
+            # corruptions) makes the output-checksum delta equal the *true*
+            # value, so the unified correction below restores it exactly —
+            # without this, a 1e38-magnitude corruption is "corrected" by
+            # adding a delta that catastrophically cancels (residual = the
+            # whole true value). Same trick as the GEMM1 score clip.
+            vbound = jnp.max(jnp.abs(v.astype(jnp.float32))) * 1.001 + 1e-6
+            o_norm = jnp.where(
+                jnp.isfinite(o_norm) & (jnp.abs(o_norm) <= vbound),
+                o_norm, 0.0)
         oc1_n = oc1 / l_safe
         oc2_n = oc2 / l_safe
         verdict = cks.verify_and_correct(

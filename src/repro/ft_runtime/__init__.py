@@ -1,4 +1,5 @@
 from repro.ft_runtime.checkpoint import (AsyncCheckpointer, latest_step,
                                          restore, save)
 from repro.ft_runtime.elastic import MeshPlan, build_mesh, plan_mesh
-from repro.ft_runtime.monitor import FaultRateMonitor, StragglerMonitor
+from repro.ft_runtime.monitor import (FaultRateMonitor, RequestFaultStats,
+                                      ServeFaultTelemetry, StragglerMonitor)

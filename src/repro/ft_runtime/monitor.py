@@ -1,4 +1,4 @@
-"""Straggler and fault monitoring for the training loop.
+"""Straggler and fault monitoring for the training loop and serve engine.
 
 On a real pod this wraps per-host heartbeats; the detection logic (which is
 what we can exercise here) is host-agnostic: robust step-time outliers via
@@ -54,6 +54,97 @@ class StragglerMonitor:
         if is_slow:
             self.flagged += 1
         return StragglerVerdict(is_slow, dt, med, thr)
+
+
+@dataclasses.dataclass
+class RequestFaultStats:
+    """Per-request EFTA telemetry aggregated over every decode step the
+    request participated in (5-vector site layout matches FTReport:
+    [gemm1, exp, rowmax, rowsum, gemm2])."""
+
+    steps: int = 0
+    detected: list = dataclasses.field(default_factory=lambda: [0] * 5)
+    corrected: list = dataclasses.field(default_factory=lambda: [0] * 5)
+    retries: int = 0
+
+    @property
+    def total_detected(self) -> int:
+        return sum(self.detected)
+
+    @property
+    def total_corrected(self) -> int:
+        return sum(self.corrected)
+
+    @property
+    def detection_rate(self) -> float:
+        """Fraction of this request's steps that saw >= 1 detection."""
+        return 0.0 if not self.steps else self._steps_with_detection / self.steps
+
+    _steps_with_detection: int = 0
+
+
+class ServeFaultTelemetry:
+    """Aggregates per-request and per-step FTReports for the serve engine.
+
+    The engine calls ``observe_step`` once per *committed* decode step with
+    the (rid -> (detected[5], corrected[5])) mapping of the rows that were
+    active, plus how many retries the step took before committing. Feeds the
+    same ``FaultRateMonitor`` escalation logic used by the training loop, so
+    sustained detections (failing chip, not transient SEUs) surface as a
+    "cordon" status for the launcher.
+    """
+
+    def __init__(self, monitor: Optional["FaultRateMonitor"] = None):
+        self.requests: dict = {}
+        self.step_log: list = []
+        self.monitor = monitor or FaultRateMonitor()
+        self.status = "ok"
+
+    def _stats(self, rid: int) -> RequestFaultStats:
+        return self.requests.setdefault(rid, RequestFaultStats())
+
+    def observe_step(self, per_request: dict, *, retries: int = 0) -> str:
+        step_detected = 0
+        for rid, (det, cor) in per_request.items():
+            st = self._stats(rid)
+            st.steps += 1
+            st.retries += retries
+            det = [int(x) for x in det]
+            cor = [int(x) for x in cor]
+            st.detected = [a + b for a, b in zip(st.detected, det)]
+            st.corrected = [a + b for a, b in zip(st.corrected, cor)]
+            if sum(det):
+                st._steps_with_detection += 1
+            step_detected += sum(det)
+        self.step_log.append({"requests": len(per_request),
+                              "detected": step_detected,
+                              "retries": retries})
+        self.status = self.monitor.observe(step_detected)
+        return self.status
+
+    def observe_prefill(self, rid: int, det, cor, *, retries: int = 0) -> str:
+        st = self._stats(rid)
+        det = [int(x) for x in det]
+        st.detected = [a + b for a, b in zip(st.detected, det)]
+        st.corrected = [a + int(b) for a, b in zip(st.corrected, cor)]
+        st.retries += retries
+        # prefill detections count toward the step log and the sustained-
+        # fault escalation just like decode steps: a failing chip corrupts
+        # prefills too, and summary() must not under-report them
+        self.step_log.append({"requests": 1, "detected": sum(det),
+                              "retries": retries, "prefill": True})
+        self.status = self.monitor.observe(sum(det))
+        return self.status
+
+    def summary(self) -> dict:
+        steps = len(self.step_log)
+        return {
+            "steps": steps,
+            "requests": len(self.requests),
+            "detected": sum(s["detected"] for s in self.step_log),
+            "retries": sum(s["retries"] for s in self.step_log),
+            "status": self.status,
+        }
 
 
 class FaultRateMonitor:

@@ -31,6 +31,10 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.efta import EFTAConfig, MASK_VALUE
 from repro.core.fault import Site
 
+# renamed TPUCompilerParams -> CompilerParams across pallas versions
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 # fault descriptor layout (int32[8]):
 # [site, kv_block, bh, row, col, bit, enabled, _pad]
 F_SITE, F_BLOCK, F_BH, F_ROW, F_COL, F_BIT, F_ON = range(7)
@@ -102,6 +106,7 @@ def _efta_kernel(
     o_ref, rep_ref,
     # scratch
     m_scr, l_scr, lsh_scr, r_scr, acc_scr, oc1_scr, oc2_scr, det_scr,
+    vmax_scr,
     *,
     sm_scale: float,
     causal: bool,
@@ -141,6 +146,7 @@ def _efta_kernel(
         det_scr[2] = 0
         det_scr[3] = 0
         det_scr[4] = 0
+        vmax_scr[0] = 0.0
 
     # Causal block skipping: KV blocks strictly above the diagonal contribute
     # nothing — skip their MXU work entirely (flash-attention-2 style).
@@ -151,12 +157,20 @@ def _efta_kernel(
         run = kv_start <= q_start + block_q - 1
     if window is not None:
         run = run & (q_start - (kv_start + block_kv - 1) < window)
+    if kv_seq_len < n_kv * block_kv:
+        # ragged KV: blocks entirely past the valid prefix are all-masked
+        run = run & (kv_start < kv_seq_len)
 
     @pl.when(run)
     def _body():
         q = q_ref[...]                      # (Br, D)
         k = k_ref[...]                      # (Bc, D)
         v = v_ref[...]                      # (Bc, D)
+        if ft:
+            # running max|V| across KV blocks: the convex-combination bound
+            # |O/l| <= max|V| used by the finalize-stage NVR restriction
+            vmax_scr[0] = jnp.maximum(
+                vmax_scr[0], jnp.max(jnp.abs(v.astype(jnp.float32))))
 
         # ---- GEMM I on the MXU (bf16 in, f32 accumulate) + ABFT ----------
         s = jax.lax.dot_general(
@@ -245,7 +259,17 @@ def _efta_kernel(
                     p_raw = jax.lax.dynamic_update_slice(
                         p_raw, seg, (0, l * s_kv))
         if ft and shadow_rowmax and correct:
-            p_raw = jnp.minimum(p_raw, 1.0)  # NVR range restriction on P
+            # Exact recompute backstop (beyond-paper, mirrors the jnp path):
+            # EXP corruptions whose fold product underflows (g_kv segments of
+            # e^{s-m} can reach 0 in f32) slip the product check, and the
+            # NVR clamp alone only bounds the damage. The recompute is
+            # already materialized for the correction path above, so an
+            # exact compare-and-select closes the gap for one VPU pass.
+            # Safe only with shadow_rowmax (m is exact).
+            recheck = jnp.exp(jnp.minimum(s - m_sub, cap))
+            slipped = p_raw != recheck
+            det_scr[1] += slipped.sum(dtype=jnp.int32)
+            p_raw = jnp.where(slipped, recheck, p_raw)
         p = jnp.where(mask, p_raw, 0.0)
 
         # ---- rescale + rowsum (+ shadow) ---------------------------------
@@ -315,13 +339,22 @@ def _efta_kernel(
         l_safe = jnp.where(l_f == 0.0, 1.0, l_f)
         o = acc_scr[...] / l_safe
         if ft:
+            if correct:
+                # NVR range restriction: O/l is a convex combination of V
+                # rows, so |o| <= max|V|. Zero violations (incl. NaN/inf)
+                # so the output-checksum delta restores the exact value —
+                # otherwise a 1e38-scale accumulator corruption cancels
+                # catastrophically in the correction add.
+                bound = vmax_scr[0] * 1.001 + 1e-6
+                o = jnp.where(jnp.isfinite(o) & (jnp.abs(o) <= bound),
+                              o, 0.0)
             oc1 = oc1_scr[...] / l_safe
             oc2 = oc2_scr[...] / l_safe
             s1 = _fold_slices(o, s_out, weighted=False)
             s2 = _fold_slices(o, s_out, weighted=True)
             d1 = oc1 - s1
             d2 = oc2 - s2
-            bad = jnp.abs(d1) > eps3
+            bad = ~(jnp.abs(d1) <= eps3)   # NaN-safe (detect mode)
             det_scr[4] += bad.sum(dtype=jnp.int32)
             if correct:
                 o = _correct_strided(o, d1, d2, bad, s_out)
@@ -341,6 +374,7 @@ def efta_attention_pallas(
     cfg: EFTAConfig,
     causal: bool = False,
     window: Optional[int] = None,
+    kv_len: Optional[int] = None,
     sm_scale: Optional[float] = None,
     fault: Optional[jax.Array] = None,
     block_q: int = 128,
@@ -350,12 +384,20 @@ def efta_attention_pallas(
 
     Returns (out (B, H, Sq, D), detected (4,) int32).
     ``fault``: int32[8] SEU descriptor (see module docstring) or None.
+    ``kv_len`` (static int) masks a ragged KV tail: only the first ``kv_len``
+    of the ``Skv`` cache slots are attended (serving caches are allocated at
+    block-aligned capacity but only partially filled). It also tightens the
+    SNVR rowsum bound to the number of *valid* keys.
     ``interpret=True`` validates on CPU; on TPU pass False.
     """
     b, h, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
     grp = h // hkv
     scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    if kv_len is None:
+        kv_len = skv
+    if not 0 < kv_len <= skv:
+        raise ValueError(f"kv_len {kv_len} out of range (0, {skv}]")
 
     block_q = min(block_q, sq)
     block_kv = min(cfg.block_kv, skv)
@@ -376,7 +418,7 @@ def efta_attention_pallas(
     kernel = functools.partial(
         _efta_kernel,
         sm_scale=scale, causal=causal, window=window,
-        block_q=block_q, block_kv=block_kv, n_kv=n_kv, kv_seq_len=skv,
+        block_q=block_q, block_kv=block_kv, n_kv=n_kv, kv_seq_len=kv_len,
         s_kv=s_kv, s_out=s_out, mode=cfg.mode, unified=cfg.unified,
         shadow_rowsum=cfg.shadow_rowsum, shadow_rowmax=cfg.shadow_rowmax,
         eps1=eps1, eps2=eps2, eps3=eps3)
@@ -404,6 +446,7 @@ def efta_attention_pallas(
             pltpu.VMEM((block_q, s_out), jnp.float32),  # O checksum 1
             pltpu.VMEM((block_q, s_out), jnp.float32),  # O checksum 2
             pltpu.SMEM((5,), jnp.int32),             # detection counters
+            pltpu.SMEM((1,), jnp.float32),           # running max|V| (NVR)
         ],
     )
 
@@ -414,7 +457,7 @@ def efta_attention_pallas(
             jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
             jax.ShapeDtypeStruct((b * h, n_q, 5), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(fault, qr, kr, vr)

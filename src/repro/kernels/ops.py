@@ -13,6 +13,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.efta import EFTAConfig, FTReport, efta_attention, reference_attention
 from repro.kernels.efta_attention import efta_attention_pallas
@@ -51,11 +52,15 @@ def attention(
                               sm_scale=sm_scale, fault=fault,
                               kv_positions=kv_positions)
     if impl == "efta_pallas":
-        if kv_len is not None or q_offset != 0:
+        if kv_positions is not None or q_offset != 0 or (
+                kv_len is not None
+                and not isinstance(kv_len, (int, np.integer))):
             raise NotImplementedError(
-                "ragged KV / decode offsets route through impl='efta'")
+                "ring caches / decode offsets / traced kv_len route through "
+                "impl='efta'; the Pallas kernel takes a static ragged kv_len")
         out, det = efta_attention_pallas(
             q, k, v, cfg=cfg, causal=causal, window=window,
+            kv_len=None if kv_len is None else int(kv_len),
             sm_scale=sm_scale, fault=fault, interpret=interpret)
         return out, FTReport(det, det if cfg.mode == "correct" else det * 0,
                              jnp.zeros((3,), jnp.float32))

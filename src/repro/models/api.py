@@ -95,22 +95,37 @@ class Model:
         return stack(one, cfg.num_layers)
 
     def prefill(self, params, tokens, cache, *, frontend=None,
-                enc_tokens=None, mesh=None):
-        """Process the prompt, fill caches. Returns (last-token logits, cache)."""
+                enc_tokens=None, mesh=None, lengths=None, fault=None):
+        """Process the prompt, fill caches. Returns (last-token logits, cache).
+
+        ``lengths`` (B,) int32 supports ragged prompts padded to a common
+        width: the returned logits are gathered at ``lengths - 1`` per row
+        instead of the last column. Causality guarantees the gathered logits
+        are unaffected by the padding tokens; the serve engine additionally
+        rewinds each slot's cache position to its true length so padded K/V
+        slots are masked out of subsequent decode steps.
+        """
         batch = {"tokens": tokens}
         if frontend is not None:
             batch["frontend"] = frontend
         if enc_tokens is not None:
             batch["enc_tokens"] = enc_tokens
         logits, rep, _, new_cache = forward(params, self.cfg, batch, mesh=mesh,
-                                            cache=cache, mode="prefill")
-        return logits[:, -1, :], rep, new_cache
+                                            cache=cache, mode="prefill",
+                                            fault=fault)
+        if lengths is None:
+            return logits[:, -1, :], rep, new_cache
+        idx = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1, 0,
+                       logits.shape[1] - 1)
+        last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+        return last, rep, new_cache
 
-    def decode_step(self, params, token, cache, *, mesh=None):
+    def decode_step(self, params, token, cache, *, mesh=None, fault=None):
         """token: (B, 1). Returns (logits (B, V), report, cache)."""
         batch = {"tokens": token}
         logits, rep, _, new_cache = forward(params, self.cfg, batch, mesh=mesh,
-                                            cache=cache, mode="decode")
+                                            cache=cache, mode="decode",
+                                            fault=fault)
         return logits[:, -1, :], rep, new_cache
 
 

@@ -112,7 +112,7 @@ def _block_init(key, cfg: ModelConfig, *, cross: bool = False,
 
 def _block_apply(params, x, *, cfg: ModelConfig, flags, cache, mode,
                  positions, memory, mesh, kind: Optional[str] = None,
-                 causal: bool = True):
+                 causal: bool = True, fault=None):
     """One transformer block. Returns (x, report, aux, new_cache)."""
     kind = kind or cfg.family
     rep = FTReport.zero()
@@ -152,7 +152,7 @@ def _block_apply(params, x, *, cfg: ModelConfig, flags, cache, mode,
     h, rep_a, new_attn_cache = attn_apply(
         params["attn"], h_in, acfg=acfg2, ft=cfg.ft,
         window=eff_window, positions=positions, cache=attn_cache, mode=mode,
-        mesh=mesh)
+        fault=fault, mesh=mesh)
     rep = rep.merge(rep_a)
 
     if kind == "hybrid":
@@ -265,7 +265,7 @@ def _maybe_remat(fn, cfg: ModelConfig):
 
 
 def _scan_blocks(params_stack, x, *, cfg, flags_np, cache_stack, mode,
-                 positions, memory, mesh, kind=None, causal=True):
+                 positions, memory, mesh, kind=None, causal=True, fault=None):
     """lax.scan over stacked block params (+ optional stacked caches)."""
     flags_arrs = {k: jnp.asarray(v) for k, v in flags_np.items()}
     have_cache = cache_stack is not None
@@ -286,7 +286,7 @@ def _scan_blocks(params_stack, x, *, cfg, flags_np, cache_stack, mode,
         x, rep_b, aux, new_c = _block_apply(
             bp, x, cfg=cfg, flags=fl, cache=cch, mode=mode,
             positions=positions, memory=memory, mesh=mesh, kind=kind,
-            causal=causal)
+            causal=causal, fault=fault)
         return (x, rep.merge(rep_b)), (aux, new_c) if have_cache else (aux,)
 
     body = _maybe_remat(body, cfg)
@@ -304,8 +304,14 @@ def _scan_blocks(params_stack, x, *, cfg, flags_np, cache_stack, mode,
 
 
 def forward(params, cfg: ModelConfig, batch: dict, *, mesh=None,
-            cache=None, mode: str = "train"):
-    """Returns (logits f32 (B, S, V), FTReport, aux_loss, new_cache)."""
+            cache=None, mode: str = "train", fault=None):
+    """Returns (logits f32 (B, S, V), FTReport, aux_loss, new_cache).
+
+    ``fault`` is a :class:`repro.core.fault.FaultSpec` injected into every
+    decoder self-attention call (the SEU strikes each attention layer's
+    matching (site, kv-block) — a superset of the paper's single-layer SEU,
+    so detection/correction coverage is exercised at least as hard).
+    """
     tokens = batch["tokens"]
     b, s = tokens.shape
     x = embed_apply(params["embed"], tokens)
@@ -366,7 +372,7 @@ def forward(params, cfg: ModelConfig, batch: dict, *, mesh=None,
                                             "theta": jnp.float32(
                                                 cfg.attn.rope_theta)},
                     cache=c_i, mode=mode, positions=positions, memory=None,
-                    mesh=mesh, kind="dense")
+                    mesh=mesh, kind="dense", fault=fault)
                 rep = rep.merge(rb)
                 aux_t += a_i
                 new_cs.append(nc)
@@ -401,7 +407,7 @@ def forward(params, cfg: ModelConfig, batch: dict, *, mesh=None,
         x, rep_b, aux, new_cache = _scan_blocks(
             params["blocks"], x, cfg=cfg, flags_np=flags, cache_stack=cache,
             mode=mode, positions=positions, memory=memory, mesh=mesh,
-            kind=kind, causal=causal)
+            kind=kind, causal=causal, fault=fault)
         rep = rep.merge(rep_b)
 
     x = norm_apply(cfg.norm, params["final_norm"], x)

@@ -1,1 +1,6 @@
+from repro.serve.cache import KVCachePool
+from repro.serve.engine import EngineStats, ServeEngine, batch_faults
+from repro.serve.sampling import SamplingParams, sample_tokens
+from repro.serve.scheduler import (ContinuousBatchingScheduler, Request,
+                                   RequestState)
 from repro.serve.step import greedy_generate, make_decode_step, make_prefill_step

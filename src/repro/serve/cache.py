@@ -1,0 +1,113 @@
+"""Slot-based KV-cache pool for continuous batching.
+
+The pool holds a fixed number of request *slots*, each a full per-layer
+ring KV cache (the ring semantics — ``slot = position % cache_len`` plus
+``kv_positions`` mask reconstruction — already live in
+``repro.models.attention``; this module only manages slot lifetime).
+
+Device layout: the model's stacked cache pytree with the batch axis as the
+slot axis, except that the per-layer position counter is widened from
+``(num_layers,)`` to ``(num_layers, n_slots)`` so every slot advances
+independently. The engine vmaps the decode step over the slot axis, which is
+exactly what makes mixed-progress requests coexist in one fixed-shape jitted
+computation.
+
+Slot bookkeeping (free list) is host-side: admissions/evictions happen
+between jitted steps, never inside them.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import KVCache
+
+
+def map_kv_nodes(tree: Any, fn: Callable[[KVCache], Any]) -> Any:
+    """Map ``fn`` over every KVCache node of a stacked cache pytree."""
+    if isinstance(tree, KVCache):
+        return fn(tree)
+    if isinstance(tree, dict):
+        return {k: map_kv_nodes(v, fn) for k, v in tree.items()}
+    raise TypeError(f"unsupported cache node {type(tree).__name__}: the "
+                    "serve engine handles attention-cache families only")
+
+
+class KVCachePool:
+    """Fixed-capacity pool of per-request ring KV caches.
+
+    ``state`` is the live device pytree; ``alloc``/``release`` manage the
+    host-side free list; ``write_row`` scatters a freshly prefied batch-1
+    cache into a slot and pins that slot's position to the request's true
+    prompt length (invalidating any padded prefill slots).
+    """
+
+    def __init__(self, model, n_slots: int, cache_len: int):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.model = model
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        base = model.init_cache(n_slots, cache_len=cache_len)
+        # pos: (num_layers,) shared scalar -> (num_layers, n_slots) per-slot.
+        self.state = map_kv_nodes(
+            base, lambda c: c._replace(
+                pos=jnp.zeros(c.pos.shape + (n_slots,), jnp.int32)))
+        self._free: List[int] = list(range(n_slots))
+
+    # -- host-side slot lifetime -------------------------------------------
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        return self._free.pop(0) if self._free else None
+
+    def release(self, slot: int) -> None:
+        if slot in self._free:
+            raise ValueError(f"slot {slot} double-freed")
+        self._free.append(slot)
+        self._free.sort()
+
+    # -- device-side row plumbing ------------------------------------------
+    def write_row(self, slot: int, row_cache: Any, length: int) -> None:
+        """Install a batch-1 prefilled cache into ``slot`` with its position
+        counter rewound to ``length`` (the true, unpadded prompt length)."""
+
+        def put(pool: KVCache, row: KVCache) -> KVCache:
+            return pool._replace(
+                k=pool.k.at[:, slot].set(row.k[:, 0]),
+                v=pool.v.at[:, slot].set(row.v[:, 0]),
+                ck=pool.ck.at[:, slot].set(row.ck[:, 0]),
+                cv=pool.cv.at[:, slot].set(row.cv[:, 0]),
+                pos=pool.pos.at[:, slot].set(jnp.int32(length)))
+
+        it = iter(_kv_node_list(row_cache))
+        self.state = map_kv_nodes(self.state, lambda c: put(c, next(it)))
+
+    def vmap_axes(self) -> Any:
+        """in/out_axes pytree mapping the slot axis for jax.vmap: axis 1 of
+        every array leaf (axis 0 is the stacked layer axis)."""
+        return jax.tree.map(lambda _: 1, self.state)
+
+
+def _kv_node_list(tree: Any) -> List[KVCache]:
+    acc: List[KVCache] = []
+    map_kv_nodes(tree, lambda c: (acc.append(c), c)[1])
+    return acc
+
+
+def add_unit_batch(cache_row: Any) -> Any:
+    """(layers, ...) slot slice -> (layers, 1, ...) batch-1 model cache.
+    The per-layer position vector (layers,) is already what the model
+    expects, so only the K/V arrays grow a batch axis."""
+    return map_kv_nodes(cache_row, lambda c: c._replace(
+        k=c.k[:, None], v=c.v[:, None], ck=c.ck[:, None], cv=c.cv[:, None]))
+
+
+def drop_unit_batch(cache_row: Any) -> Any:
+    """Inverse of :func:`add_unit_batch`."""
+    return map_kv_nodes(cache_row, lambda c: c._replace(
+        k=c.k[:, 0], v=c.v[:, 0], ck=c.ck[:, 0], cv=c.cv[:, 0]))

@@ -1,0 +1,64 @@
+"""Per-request token sampling for the serve engine.
+
+Everything here is jit-friendly at fixed batch shape: per-request sampling
+parameters ride along as arrays (temperature, top-k, PRNG key per row), so one
+compiled ``sample_tokens`` serves an arbitrary mix of greedy and stochastic
+requests in the same batch. ``temperature == 0`` rows take the exact
+``argmax`` path (bit-identical to the sequential greedy decoder).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration (host-side)."""
+
+    temperature: float = 0.0   # 0 => greedy (exact argmax)
+    top_k: int = 0             # 0 => no truncation
+    seed: int = 0              # per-request PRNG stream
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError("temperature must be >= 0")
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0")
+
+
+def request_key(params: SamplingParams, rid: int) -> jax.Array:
+    """Stable per-request PRNG key: independent streams even when two
+    requests share a seed."""
+    return jax.random.fold_in(jax.random.PRNGKey(params.seed), rid)
+
+
+def _top_k_mask(logits: jax.Array, top_k: jax.Array) -> jax.Array:
+    """Mask logits below each row's k-th largest value. ``top_k`` (B,) int32;
+    0 disables truncation for that row (k clamps to the full vocab)."""
+    vocab = logits.shape[-1]
+    k_eff = jnp.where(top_k > 0, jnp.clip(top_k, 1, vocab), vocab)
+    sorted_desc = jnp.sort(logits, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(sorted_desc, (k_eff - 1)[:, None], axis=-1)
+    return jnp.where(logits >= kth, logits, -jnp.inf)
+
+
+def sample_tokens(logits: jax.Array, *, temperature: jax.Array,
+                  top_k: jax.Array, keys: jax.Array) -> jax.Array:
+    """Sample one token per row. logits (B, V) f32; temperature (B,) f32;
+    top_k (B,) int32; keys (B,) PRNG keys. Returns (B,) int32.
+
+    Stochastic rows use the Gumbel-max trick (exactly equivalent to
+    categorical sampling over the top-k-truncated, temperature-scaled
+    distribution); greedy rows bypass noise entirely.
+    """
+    greedy = temperature <= 0.0
+    masked = _top_k_mask(logits, top_k)
+    t_safe = jnp.where(greedy, 1.0, jnp.maximum(temperature, 1e-6))
+    gumbel = jax.vmap(lambda k: jax.random.gumbel(k, logits.shape[-1:],
+                                                  jnp.float32))(keys)
+    stochastic = jnp.argmax(masked / t_safe[:, None] + gumbel, axis=-1)
+    return jnp.where(greedy, jnp.argmax(logits, axis=-1),
+                     stochastic).astype(jnp.int32)

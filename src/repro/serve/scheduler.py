@@ -1,0 +1,109 @@
+"""Continuous-batching request scheduler (FCFS, iteration-level).
+
+Orca-style iteration scheduling: at *every* decode step the scheduler first
+evicts finished requests (EOS or token budget), then admits waiting requests
+into freed cache slots. Admission and eviction are host-side decisions made
+between jitted decode steps; the decode computation itself always runs at the
+full fixed slot count with finished/empty slots masked out.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+from typing import Deque, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.sampling import SamplingParams
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its lifetime bookkeeping."""
+
+    rid: int
+    prompt: np.ndarray                    # (T,) int32
+    max_new_tokens: int
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    eos_id: Optional[int] = None
+
+    state: RequestState = RequestState.WAITING
+    slot: Optional[int] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+    # number of engine decode-step retries this request sat through
+    retries: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def num_generated(self) -> int:
+        return len(self.generated)
+
+    def is_done(self) -> bool:
+        if self.num_generated >= self.max_new_tokens:
+            return True
+        return (self.eos_id is not None and self.generated
+                and self.generated[-1] == self.eos_id)
+
+
+@dataclasses.dataclass
+class ScheduleDecision:
+    admitted: List[Request]
+    evicted: List[Request]
+
+
+class ContinuousBatchingScheduler:
+    """FCFS admission over a fixed slot budget."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.waiting: Deque[Request] = collections.deque()
+        self.running: Dict[int, Request] = {}      # slot -> request
+        self.finished: List[Request] = []
+
+    def add(self, req: Request) -> None:
+        if req.state is not RequestState.WAITING:
+            raise ValueError(f"request {req.rid} already scheduled")
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def step(self, alloc_slot, release_slot) -> ScheduleDecision:
+        """One scheduling iteration. ``alloc_slot``/``release_slot`` are the
+        cache pool's slot allocator callbacks."""
+        evicted: List[Request] = []
+        for slot in sorted(self.running):
+            req = self.running[slot]
+            if req.is_done():
+                req.state = RequestState.FINISHED
+                del self.running[slot]
+                release_slot(slot)
+                req.slot = None
+                self.finished.append(req)
+                evicted.append(req)
+
+        admitted: List[Request] = []
+        while self.waiting:
+            slot = alloc_slot()
+            if slot is None:
+                break
+            req = self.waiting.popleft()
+            req.slot = slot
+            req.state = RequestState.RUNNING
+            self.running[slot] = req
+            admitted.append(req)
+        return ScheduleDecision(admitted=admitted, evicted=evicted)
+
+    def active_rows(self) -> Sequence[Request]:
+        return [self.running[s] for s in sorted(self.running)]

@@ -28,7 +28,12 @@ def make_decode_step(model: Model, *, mesh=None):
 
 def greedy_generate(model: Model, params, tokens, *, steps: int,
                     cache_len: Optional[int] = None, mesh=None, **prefill_kw):
-    """Greedy decoding driver (used by examples and tests)."""
+    """Per-token Python-loop greedy decoder.
+
+    Kept as the exactness oracle and throughput baseline for the
+    continuous-batching ``repro.serve.engine.ServeEngine`` (which must be
+    token-identical to running this per request); production serving goes
+    through the engine."""
     b = tokens.shape[0]
     cache = model.init_cache(b, cache_len=cache_len or
                              (tokens.shape[1] + steps + 1))

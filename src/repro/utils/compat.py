@@ -1,0 +1,22 @@
+"""Version-compatibility shims for the pinned jax.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and renamed its replication-check kwarg ``check_rep`` -> ``check_vma`` along
+the way; this wrapper presents the new-style interface on either version.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    kw = {} if check_vma is None else {_CHECK_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

@@ -1,0 +1,67 @@
+"""Property-testing shim: real ``hypothesis`` when installed, otherwise a
+tiny deterministic fallback so the property suites still execute.
+
+The seed image does not ship ``hypothesis`` (CI pins it, laptops may not).
+``pytest.importorskip`` would silently drop the whole module — including its
+purely deterministic tests — so instead the strategy combinators used by this
+repo (``integers``, ``sampled_from``, ``booleans``, ``floats``) are
+re-implemented as seeded samplers and ``@given`` becomes "run the test body
+over N deterministic draws". Shrinking/edge-case search is lost, but every
+property still gets exercised on a reproducible sample.
+
+Usage in test modules::
+
+    from _propcheck import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+    import types
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.randrange(2)))
+
+    def _floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    st = types.SimpleNamespace(integers=_integers, sampled_from=_sampled_from,
+                               booleans=_booleans, floats=_floats)
+
+    def settings(**_kw):
+        return lambda fn: fn
+
+    def given(*strategies):
+        def deco(fn):
+            def run():
+                rng = random.Random(0xEF7A)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    fn(*(s.draw(rng) for s in strategies))
+            # NOT functools.wraps: copying __wrapped__ would make pytest
+            # unwrap to the original signature and hunt for fixtures.
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+        return deco

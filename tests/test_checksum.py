@@ -1,11 +1,12 @@
-"""Property tests for the tensor-checksum algebra (paper §4.1)."""
-import hypothesis
-import hypothesis.strategies as st
+"""Property tests for the tensor-checksum algebra (paper §4.1).
+
+Uses ``_propcheck``: real hypothesis when installed, a seeded deterministic
+fallback otherwise (so the suite collects and runs either way)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _propcheck import given, settings, st
 
 from repro.core import checksum as cks
 

@@ -62,6 +62,61 @@ def test_kernel_fault_injection(site):
     assert err < 5e-3, f"site {site}: err {err}"
 
 
+@pytest.mark.parametrize("h,hkv", [(8, 2), (4, 1), (6, 3)])
+def test_kernel_gqa_grouping(h, hkv):
+    """GQA/MQA head grouping parity vs the oracle (previously only covered
+    for the pure-JAX path in test_efta.py)."""
+    q, k, v = qkv(2, h, hkv, 128, 32, jnp.float32, seed=3)
+    cfg = EFTAConfig(mode="correct", stride=8, block_kv=64)
+    out, det = efta_attention_pallas(q, k, v, cfg=cfg, block_q=64)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, atol=3e-6)
+    assert int(det.sum()) == 0
+
+
+@pytest.mark.parametrize("kv_len", [96, 200, 256])
+@pytest.mark.parametrize("causal", [False, True])
+def test_kernel_ragged_kv_len(kv_len, causal):
+    """Serving-style ragged KV: the cache holds 256 block-aligned slots but
+    only ``kv_len`` are valid. Must match the oracle's kv_len mask and keep
+    a clean detection report (the masked tail is no false-positive source)."""
+    from repro.core.efta import reference_attention
+    q, k, v = qkv(1, 4, 2, 256, 64, jnp.float32, seed=4)
+    cfg = EFTAConfig(mode="correct", stride=8, block_kv=64)
+    out, det = efta_attention_pallas(q, k, v, cfg=cfg, causal=causal,
+                                     kv_len=kv_len, block_q=128)
+    ref = reference_attention(q, k, v, causal=causal, kv_len=kv_len)
+    np.testing.assert_allclose(out, ref, atol=3e-6)
+    assert int(det.sum()) == 0
+
+
+def test_kernel_gqa_ragged_combined_matches_jnp_efta():
+    """GQA + ragged kv_len together, cross-checked against the pure-JAX EFTA
+    twin (both fault-tolerance paths active)."""
+    from repro.core.efta import efta_attention
+    q, k, v = qkv(1, 8, 2, 256, 32, jnp.float32, seed=5)
+    cfg = EFTAConfig(mode="correct", stride=8, block_kv=64)
+    out, det = efta_attention_pallas(q, k, v, cfg=cfg, kv_len=130,
+                                     block_q=128)
+    ref, rep = efta_attention(q, k, v, cfg=cfg, kv_len=130)
+    np.testing.assert_allclose(out, ref, atol=3e-6)
+    assert int(det.sum()) == 0 and int(rep.detected.sum()) == 0
+
+
+def test_kernel_ragged_fault_still_corrected():
+    """A GEMM1 SEU inside the valid ragged prefix is corrected as usual."""
+    q, k, v = qkv(1, 4, 2, 256, 64, jnp.float32, seed=6)
+    cfg = EFTAConfig(mode="correct", stride=8, block_kv=64)
+    from repro.core.efta import reference_attention
+    ref = reference_attention(q, k, v, kv_len=150)
+    fault = jnp.array([0, 1, 2, 17, 21, 27, 1, 0], jnp.int32)
+    out, det = efta_attention_pallas(q, k, v, cfg=cfg, kv_len=150,
+                                     fault=fault, block_q=128)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    assert err < 5e-3, err
+    assert int(det.sum()) >= 1
+
+
 def test_kernel_off_mode_is_plain_flash():
     q, k, v = qkv(1, 2, 2, 256, 32, jnp.float32)
     cfg = EFTAConfig(mode="off", stride=8, block_kv=64)

@@ -1,11 +1,10 @@
 """Property-based sweep: the Pallas EFTA kernel must equal the jnp oracle for
 arbitrary valid (shape, block, stride) combinations, and any high-bit GEMM
 fault must be corrected (hypothesis-generated coordinates)."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from _propcheck import given, settings, st
 
 from repro.core import EFTAConfig
 from repro.kernels import efta_attention_pallas
