@@ -14,6 +14,7 @@ from benchmarks import (bench_fig09_decoupled_vs_efta,
                         bench_fig14_snvr_distribution,
                         bench_tab12_unified_verification,
                         bench_fig15_model_overhead,
+                        bench_paged_cache,
                         bench_serve_throughput,
                         roofline)
 
@@ -27,6 +28,7 @@ ALL = {
     "tab12": bench_tab12_unified_verification.run,
     "fig15": bench_fig15_model_overhead.run,
     "serve": bench_serve_throughput.run,
+    "paged": bench_paged_cache.run,
     "roofline": roofline.run,
 }
 

@@ -1,6 +1,7 @@
 """Core EFTA library — the paper's contribution as composable JAX modules."""
 from repro.core.checksum import (
     Checksums,
+    LOG_PROD_FLOOR,
     PAPER_STRIDE,
     TPU_STRIDE,
     encode_cols,
@@ -9,11 +10,13 @@ from repro.core.checksum import (
     fold2,
     foldprod,
     verify_and_correct,
+    verify_block,
     verify_product,
+    verify_product_log,
 )
 from repro.core.efta import EFTAConfig, FTReport, efta_attention, efta_mha, reference_attention
 from repro.core.decoupled import decoupled_ft_attention, decoupled_memory_bytes
 from repro.core.abft_gemm import abft_matmul, tensor_abft_matmul
 from repro.core.fault import FaultSpec, Site, inject, random_fault
-from repro.core.campaign import (CampaignResult, SiteTally, DEFAULT_SITES,
-                                 run_campaign)
+from repro.core.campaign import (CampaignResult, KVCampaignResult, SiteTally,
+                                 DEFAULT_SITES, run_campaign, run_kv_campaign)

@@ -68,6 +68,112 @@ class CampaignResult:
         return "\n".join(rows)
 
 
+@dataclasses.dataclass
+class KVCampaignResult:
+    """Outcome of a resident-KV SEU campaign (Site.KV) over the paged serve
+    engine: every trial flips one bit of a live KV-cache block *between*
+    decode steps, mimicking an HBM upset in stored state that EFTA's
+    in-compute checks cannot see."""
+
+    n_trials: int = 0
+    detected: int = 0            # caught by block checksums at gather time
+    repaired_blocks: int = 0     # blocks re-prefilled by the engine
+    undetected: int = 0          # below-threshold flips (denormal/low-impact)
+    mismatched_requests: int = 0  # final tokens differing from the clean run
+    telemetry_kv_detected: int = 0  # per-request site-6 counts (ServeFault...)
+
+    def format_table(self) -> str:
+        return (f"KV campaign: trials={self.n_trials} "
+                f"detected={self.detected} repaired={self.repaired_blocks} "
+                f"undetected={self.undetected} "
+                f"mismatched_requests={self.mismatched_requests}")
+
+
+def run_kv_campaign(
+    *,
+    n_trials: int = 12,
+    seed: int = 0,
+    arch: str = "gpt2-smoke",
+    n_slots: int = 2,
+    cache_len: int = 64,
+    block_size: int = 16,
+    n_requests: int = 3,
+    max_prompt: int = 24,
+    gen: int = 8,
+    bit_range: Tuple[int, int] = (24, 30),
+) -> KVCampaignResult:
+    """Seeded SEU campaign against *resident* KV state (paper's gap: ALBERTA-
+    style memory faults, not compute faults).
+
+    Drives one clean and one faulted :class:`repro.serve.PagedServeEngine`
+    over the same request stream; each trial flips a random high bit of a
+    random filled row of a random live block. The engine must detect the
+    corruption at the next gather, re-prefill only the poisoned block, retry
+    the step, and finish with tokens identical to the clean run.
+    """
+    # local imports: core.campaign is imported by repro.core's __init__, and
+    # repro.serve imports repro.core — module-level imports would cycle
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve.paged import PagedServeEngine
+
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed + 1)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            (int(rng.integers(2, max_prompt + 1)),)
+                            ).astype(np.int32) for _ in range(n_requests)]
+
+    def fresh():
+        eng = PagedServeEngine(model, params, n_slots=n_slots,
+                               cache_len=cache_len, block_size=block_size)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=gen)
+        return eng
+
+    clean_eng = fresh()
+    clean = clean_eng.run()
+
+    eng = fresh()
+    res = KVCampaignResult()
+    hkv = cfg.attn.num_kv_heads
+    while eng.scheduler.has_work:
+        active = [r for r in eng.scheduler.active_rows() if not r.is_done()]
+        candidates = [r for r in active if eng._pos[r.slot] > 0]
+        if candidates and res.n_trials < n_trials:
+            req = candidates[int(rng.integers(0, len(candidates)))]
+            resident = int(eng._pos[req.slot])
+            j = int(rng.integers(0, -(-resident // block_size)))
+            filled = min(block_size, resident - j * block_size)
+            before = eng.paged_stats.kv_detected_blocks
+            eng.inject_kv_fault(
+                layer=int(rng.integers(0, cfg.num_layers)),
+                block=req.block_ids[j],
+                head=int(rng.integers(0, hkv)),
+                row=int(rng.integers(0, filled)),
+                col=int(rng.integers(0, cfg.attn.head_dim)),
+                bit=int(rng.integers(bit_range[0], bit_range[1] + 1)),
+                into="k" if rng.integers(0, 2) else "v")
+            res.n_trials += 1
+            eng.step()
+            if eng.paged_stats.kv_detected_blocks > before:
+                res.detected += 1
+            else:
+                res.undetected += 1
+        else:
+            eng.step()
+    faulty = {r.rid: np.asarray(r.generated, np.int32)
+              for r in eng.scheduler.finished}
+    res.repaired_blocks = eng.paged_stats.kv_repaired_blocks
+    res.mismatched_requests = sum(
+        0 if np.array_equal(clean[rid], faulty[rid]) else 1 for rid in clean)
+    res.telemetry_kv_detected = sum(
+        st.detected[5] for st in eng.telemetry.requests.values())
+    return res
+
+
 def run_campaign(
     *,
     mode: str = "correct",

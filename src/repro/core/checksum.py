@@ -98,6 +98,41 @@ def encode_cols(x: jax.Array, stride: int) -> Checksums:
                      fold2(xf, stride).astype(x.dtype))
 
 
+def verify_block(
+    x: jax.Array,
+    checks: Checksums,
+    stride: int,
+    *,
+    threshold: float,
+) -> tuple[jax.Array, jax.Array]:
+    """Integrity check of a *stored* KV block against its resident checksums.
+
+    ``x``: block data (..., Bs, d); ``checks``: the :func:`encode_kv` pair
+    computed when the block was last written, shape (..., stride, d). Unlike
+    the GEMM-identity verifications this is a memory check: the fold is
+    recomputed from the resident data and compared against the stored fold,
+    so any SEU in the block (or in the checksum itself) since the last write
+    shows up as a mismatch. Both folds are verified — a single bit flip can
+    never cancel in both the unweighted and index-weighted sums.
+
+    Returns (``bad`` bool (...,) per block — reduced over the (stride, d)
+    checksum plane, NaN-safe — and the total mismatch count).
+    """
+    fresh = encode_kv(x.astype(jnp.float32), stride)
+    c1 = checks.c1.astype(jnp.float32)
+    c2 = checks.c2.astype(jnp.float32)
+    # relative threshold with a per-block magnitude floor, same rationale as
+    # verify_and_correct: verify-side rounding scales with the fold magnitude
+    floor1 = jnp.maximum(jnp.mean(jnp.abs(c1), axis=(-2, -1), keepdims=True),
+                         1e-6)
+    floor2 = jnp.maximum(jnp.mean(jnp.abs(c2), axis=(-2, -1), keepdims=True),
+                         1e-6)
+    ok1 = jnp.abs(c1 - fresh.c1) <= threshold * jnp.maximum(jnp.abs(c1), floor1)
+    ok2 = jnp.abs(c2 - fresh.c2) <= threshold * jnp.maximum(jnp.abs(c2), floor2)
+    bad = ~jnp.all(ok1 & ok2, axis=(-2, -1))
+    return bad, bad.sum(dtype=jnp.int32)
+
+
 class Verdict(NamedTuple):
     """Outcome of a checksum verification over one tensor."""
 
@@ -150,6 +185,45 @@ def verify_and_correct(
     fixed = xf.reshape(*xf.shape[:-1], g, stride) + patch
     fixed = fixed.reshape(x.shape).astype(x.dtype)
     return Verdict(fixed, n_detected, max_delta)
+
+
+# f32 exp() leaves the normal range below log(2^-126) ~= -87.3 — XLA flushes
+# subnormals to zero, so log(exp(x)) becomes -inf there. Entries deeper than
+# this floor have no faithful log-domain image in P and are excluded from the
+# log check (they are <= 1e-38 attention weights either way).
+LOG_PROD_FLOOR = -87.0
+
+
+def verify_product_log(
+    p: jax.Array,
+    log_check1: jax.Array,
+    stride: int,
+    *,
+    threshold: float,
+) -> tuple[jax.Array, jax.Array]:
+    """Log-domain EXP-stage verification (detect-mode coverage closure).
+
+    The linear fold-*product* check (:func:`verify_product`) goes blind when
+    any segment of a fold column underflows: ``prod ~ 0`` and ``check ~ 0``
+    compare equal no matter what happened to the *other* (possibly large)
+    entries of that column. Comparing in the log domain turns the product
+    into a sum — ``fold1(log P) == S_check1 - g*m`` — which stays exact down
+    to the f32 normal-range floor, so a corrupted ``P[i] = 0.9 -> 0`` in a
+    column whose product underflows is still a ~87-nat mismatch.
+
+    ``p``: exp outputs (..., W) > 0; ``log_check1``: predicted log-domain fold
+    (..., stride), i.e. ``S_check1 - g*m`` (with the same cap as P, if any).
+    The threshold is *absolute in nats* relative to ``max(|check|, 1)`` —
+    equivalent to a relative tolerance on the linear product. NaN/negative
+    corruptions (sign-bit flips) propagate to NaN and count as detected via
+    the negated comparison.
+    """
+    logp = jnp.log(p.astype(jnp.float32))          # -inf for p == 0, nan for p < 0
+    logp = jnp.maximum(logp, LOG_PROD_FLOOR)       # nan propagates
+    fold = fold1(logp, stride)
+    ref = jnp.maximum(jnp.abs(log_check1.astype(jnp.float32)), 1.0)
+    bad = ~(jnp.abs(fold - log_check1.astype(jnp.float32)) <= threshold * ref)
+    return bad, bad.sum(dtype=jnp.int32)
 
 
 def verify_product(

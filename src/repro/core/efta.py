@@ -6,9 +6,11 @@ fused into the same computation:
 
   * GEMM I  (S = Q·Kᵀ)      — tensor-checksum ABFT (encode K checksums, verify
                               the strided-fold identity on S, locate + correct)
-  * subtract-max + EXP       — checksum reuse: the *same* S checksum, shifted by
-                              ``g·m`` and exponentiated, must equal the strided
-                              *product* of P (paper Alg.1 line 13); EXP faults
+  * subtract-max + EXP       — checksum reuse: the *same* S checksum, shifted
+                              by ``g·m``, must equal the strided fold of
+                              ``log P`` (the paper's product identity, Alg.1
+                              line 13, verified in the log domain so
+                              underflowing columns stay covered); EXP faults
                               are corrected by recomputation
   * ROWMAX                   — unprotected by design: errors cancel analytically
                               (paper Case 1); we compute in f32 to avoid the
@@ -104,8 +106,9 @@ class EFTAConfig:
         if jnp.dtype(dtype) == jnp.float32:
             d = (1e-3, 1e-3, 1e-3)
         else:  # bf16 / fp16 mixed precision — coarse mantissa
-            # eps_exp stays loose: bf16 checksum rounding in the *exponent*
-            # domain becomes a multiplicative factor on the fold product.
+            # eps_exp stays loose: bf16 K-checksum rounding is an *absolute*
+            # ~2^-8 * g * |s| error in the log-domain fold, which does not
+            # shrink when the fold value itself cancels toward zero.
             d = (5e-2, 1.0, 5e-2)
         return (
             self.eps_gemm1 if self.eps_gemm1 is not None else d[0],
@@ -349,14 +352,24 @@ def efta_attention(
         p_raw = jnp.exp(jnp.minimum(s_ij - m_sub[..., None], cap))
         p_raw = inject(p_raw, fault, Site.EXP, blk_idx)
         if ft:
-            pc1 = jnp.exp(jnp.minimum(sc1 - g_kv * m_sub[..., None], cap * g_kv))
-            bad_exp, _ = cks.verify_product(p_raw, pc1, s_kv, threshold=eps2)
-            # The cap breaks the product identity only for fold columns whose
-            # *masked* raw scores exceed it — exclude those columns (their
-            # entries are zeroed by the mask anyway; no coverage loss).
-            capped = (s_ij - m_sub[..., None]) > (cap - 1e-3)
+            # Log-domain fold check (ROADMAP EXP-coverage closure): comparing
+            # the strided *product* of P against exp(S_check1 - g*m) goes
+            # blind whenever one segment underflows — prod ~ 0 == check ~ 0
+            # hides a corruption of any *other* entry in that column. In the
+            # log domain the product is a sum, exact down to the f32 normal-
+            # range floor, so detect mode no longer loses those columns.
+            lc1 = jnp.minimum(sc1 - g_kv * m_sub[..., None], cap * g_kv)
+            bad_exp, _ = cks.verify_product_log(p_raw, lc1, s_kv,
+                                                threshold=eps2)
+            # Exclusions, both computed from the (GEMM1-verified) scores: the
+            # cap breaks the identity for columns whose *masked* raw scores
+            # exceed it, and entries below the exp-underflow floor have no
+            # log-domain image in P. Excluded entries are either zeroed by
+            # the mask or exactly-zero probabilities — no coverage loss.
+            sm_shift = s_ij - m_sub[..., None]
+            excl = (sm_shift > (cap - 1e-3)) | (sm_shift < cks.LOG_PROD_FLOOR)
             col_ok = ~jnp.any(
-                capped.reshape(*capped.shape[:-1], g_kv, s_kv), axis=-2)
+                excl.reshape(*excl.shape[:-1], g_kv, s_kv), axis=-2)
             bad_exp = bad_exp & col_ok
             n_exp = bad_exp.sum(dtype=jnp.int32)
             if correct:

@@ -11,6 +11,12 @@ correct them. Sites mirror the paper's Cases:
   ROWSUM   — in the running row sum  (Case 3: SNVR range restriction)
   GEMM2    — after the P·V accumulate (ABFT on GEMM II, unified verification)
   WEIGHTS  — in model weights (memory fault; used by model-level benches)
+  KV       — in resident paged KV-cache blocks (HBM memory fault between
+             decode steps; detected at read time by the block checksums of
+             ``repro.serve.paged`` and repaired by block re-prefill). For
+             this site the FaultSpec coordinates are reinterpreted as
+             (batch=layer, block=pool block id, head=kv head, row=in-block
+             offset, col=head-dim feature).
 """
 from __future__ import annotations
 
@@ -30,6 +36,7 @@ class Site(enum.IntEnum):
     ROWSUM = 3
     GEMM2 = 4
     WEIGHTS = 5
+    KV = 6
 
 
 class FaultSpec(NamedTuple):

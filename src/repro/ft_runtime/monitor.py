@@ -56,15 +56,24 @@ class StragglerMonitor:
         return StragglerVerdict(is_slow, dt, med, thr)
 
 
+N_FAULT_SITES = 6
+SITE_LABELS = ("gemm1", "exp", "rowmax", "rowsum", "gemm2", "kv")
+
+
 @dataclasses.dataclass
 class RequestFaultStats:
-    """Per-request EFTA telemetry aggregated over every decode step the
-    request participated in (5-vector site layout matches FTReport:
-    [gemm1, exp, rowmax, rowsum, gemm2])."""
+    """Per-request fault telemetry aggregated over every decode step the
+    request participated in. Site layout extends FTReport's 5-vector with a
+    6th memory site: [gemm1, exp, rowmax, rowsum, gemm2, kv] — ``kv`` counts
+    resident KV-block checksum mismatches caught at gather time by the paged
+    cache (detected) and blocks healed by re-prefill (corrected). Engines
+    that predate the paged cache report 5-vectors; the kv slot stays zero."""
 
     steps: int = 0
-    detected: list = dataclasses.field(default_factory=lambda: [0] * 5)
-    corrected: list = dataclasses.field(default_factory=lambda: [0] * 5)
+    detected: list = dataclasses.field(
+        default_factory=lambda: [0] * N_FAULT_SITES)
+    corrected: list = dataclasses.field(
+        default_factory=lambda: [0] * N_FAULT_SITES)
     retries: int = 0
 
     @property
@@ -81,6 +90,12 @@ class RequestFaultStats:
         return 0.0 if not self.steps else self._steps_with_detection / self.steps
 
     _steps_with_detection: int = 0
+
+
+def _pad_sites(v) -> list:
+    """Normalize a 5- or 6-vector of per-site counts to N_FAULT_SITES."""
+    v = [int(x) for x in v]
+    return v + [0] * (N_FAULT_SITES - len(v))
 
 
 class ServeFaultTelemetry:
@@ -109,8 +124,8 @@ class ServeFaultTelemetry:
             st = self._stats(rid)
             st.steps += 1
             st.retries += retries
-            det = [int(x) for x in det]
-            cor = [int(x) for x in cor]
+            det = _pad_sites(det)
+            cor = _pad_sites(cor)
             st.detected = [a + b for a, b in zip(st.detected, det)]
             st.corrected = [a + b for a, b in zip(st.corrected, cor)]
             if sum(det):
@@ -124,9 +139,10 @@ class ServeFaultTelemetry:
 
     def observe_prefill(self, rid: int, det, cor, *, retries: int = 0) -> str:
         st = self._stats(rid)
-        det = [int(x) for x in det]
+        det = _pad_sites(det)
+        cor = _pad_sites(cor)
         st.detected = [a + b for a, b in zip(st.detected, det)]
-        st.corrected = [a + int(b) for a, b in zip(st.corrected, cor)]
+        st.corrected = [a + b for a, b in zip(st.corrected, cor)]
         st.retries += retries
         # prefill detections count toward the step log and the sustained-
         # fault escalation just like decode steps: a failing chip corrupts

@@ -67,6 +67,41 @@ def attention(
     raise ValueError(f"unknown attention impl {impl!r}; one of {IMPLS}")
 
 
+# --- paged KV-cache gather path --------------------------------------------
+#
+# The paged serve engine stores KV in a global block pool
+# ``(num_layers, num_blocks, Hkv, block_size, head_dim)`` and addresses it
+# through per-request block tables. Attention itself is unchanged: the gather
+# materializes each request's table as the contiguous ``(.., Hkv, S, hd)``
+# layout every impl above already accepts (token position == table order), so
+# EFTA / flash / reference all serve paged caches for free. On TPU the gather
+# lowers to a dynamic-slice stream over HBM blocks — the same access pattern
+# a fused paged-attention kernel would issue from its inner loop.
+
+
+def merge_block_axes(x: jax.Array) -> jax.Array:
+    """(L, ..., mb, Hkv, bs, hd) gathered blocks -> (L, ..., Hkv, mb*bs, hd)
+    contiguous KV layout (table order becomes token order)."""
+    n = x.ndim
+    x = x.transpose(*range(n - 4), n - 3, n - 4, n - 2, n - 1)
+    return x.reshape(*x.shape[:-3], x.shape[-3] * x.shape[-2], x.shape[-1])
+
+
+def gather_block_kv(pool: jax.Array,
+                    block_table: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Gather a paged pool array by block table.
+
+    ``pool``: (L, num_blocks, Hkv, bs, hd); ``block_table``: int32 block ids
+    of shape (mb,) or (n_slots, mb), null-padded with block 0. Returns both
+    views of the single gather: the raw block layout
+    ``(L[, n_slots], mb, Hkv, bs, hd)`` (what read-time checksum
+    verification folds over) and the contiguous per-request KV view
+    ``(L[, n_slots], Hkv, mb*bs, hd)`` (what attention consumes).
+    """
+    raw = pool[:, block_table]
+    return raw, merge_block_axes(raw)
+
+
 @functools.partial(jax.jit, static_argnames=("impl", "cfg", "causal", "window",
                                              "sm_scale", "interpret"))
 def attention_jit(q, k, v, *, impl="efta", cfg=None, causal=False, window=None,

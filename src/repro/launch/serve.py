@@ -1,8 +1,11 @@
-"""Serving launcher: fault-tolerant continuous batching over a KV-slot pool.
+"""Serving launcher: fault-tolerant continuous batching over a KV-slot pool
+or (``--paged``) the checksummed paged block pool with prefix caching.
 
-CPU-scale demo:
+CPU-scale demos:
   PYTHONPATH=src python -m repro.launch.serve --arch gpt2-smoke \
       --requests 8 --slots 4 --max-prompt 24 --gen 16 --inject-faults 3
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt2-smoke --paged \
+      --shared-prefix 16 --kv-flips 2
 """
 from __future__ import annotations
 
@@ -16,7 +19,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import FaultSpec, Site
 from repro.models import build_model
-from repro.serve import SamplingParams, ServeEngine, batch_faults
+from repro.serve import (PagedServeEngine, SamplingParams, ServeEngine,
+                         batch_faults)
 from repro.utils import get_logger
 
 
@@ -57,6 +61,18 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--inject-faults", type=int, default=0,
                     help="number of decode steps hit by a random SEU")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the checksummed paged KV block pool "
+                         "(prefix caching + read-time corruption repair)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="paged pool size (0 = ring-equivalent capacity)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of system prompt shared by every request "
+                         "(exercises the prefix cache)")
+    ap.add_argument("--kv-flips", type=int, default=0,
+                    help="random resident KV-block bit flips injected "
+                         "between decode steps (paged only)")
     ap.add_argument("--ft-mode", default=None,
                     help="override the config's EFTA mode (off/detect/correct)")
     ap.add_argument("--seed", type=int, default=0)
@@ -77,13 +93,22 @@ def main():
         _static_batch_serve(cfg, model, params, rng, args, log)
         return
 
-    eng = ServeEngine(model, params, n_slots=args.slots,
-                      cache_len=args.cache_len or None)
+    if args.paged:
+        eng = PagedServeEngine(model, params, n_slots=args.slots,
+                               cache_len=args.cache_len or None,
+                               block_size=args.block_size,
+                               num_blocks=args.num_blocks or None)
+    else:
+        eng = ServeEngine(model, params, n_slots=args.slots,
+                          cache_len=args.cache_len or None)
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, seed=args.seed)
+    shared = rng.integers(0, cfg.vocab_size,
+                          (args.shared_prefix,)).astype(np.int32)
     for _ in range(args.requests):
         t = int(rng.integers(2, args.max_prompt + 1))
-        prompt = rng.integers(0, cfg.vocab_size, (t,)).astype(np.int32)
+        prompt = np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size, (t,)).astype(np.int32)])
         eng.submit(prompt, max_new_tokens=args.gen, sampling=sampling)
 
     faults_by_step = {}
@@ -99,7 +124,30 @@ def main():
         faults_by_step[int(step)] = batch_faults(args.slots, {slot: spec})
 
     t0 = time.time()
-    outs = eng.run(faults_by_step)
+    if args.paged and args.kv_flips:
+        # drive manually so resident-state SEUs strike *between* steps
+        outs, i, flips_left = {}, 0, args.kv_flips
+        while eng.scheduler.has_work:
+            live = [r for r in eng.scheduler.active_rows()
+                    if not r.is_done() and eng._pos[r.slot] > 0]
+            if live and flips_left and rng.integers(0, 2):
+                req = live[int(rng.integers(0, len(live)))]
+                j = int(rng.integers(0, len(req.block_ids)))
+                eng.inject_kv_fault(
+                    layer=int(rng.integers(0, cfg.num_layers)),
+                    block=req.block_ids[j],
+                    head=int(rng.integers(0, cfg.attn.num_kv_heads)),
+                    row=int(rng.integers(0, args.block_size)),
+                    col=int(rng.integers(0, cfg.attn.head_dim)),
+                    bit=int(rng.integers(24, 31)),
+                    into="k" if rng.integers(0, 2) else "v")
+                flips_left -= 1
+            eng.step(faults=faults_by_step.get(i))
+            i += 1
+        outs = {r.rid: np.asarray(r.generated, np.int32)
+                for r in eng.scheduler.finished}
+    else:
+        outs = eng.run(faults_by_step)
     dt = time.time() - t0
     log.info("served %d requests (%d tokens) in %.2fs (%.1f tok/s) over "
              "%d slots in %d engine steps", len(outs), eng.stats.tokens, dt,
@@ -107,6 +155,13 @@ def main():
     summ = eng.telemetry.summary()
     log.info("EFTA telemetry: detected=%d retries=%d status=%s",
              summ["detected"], summ["retries"], summ["status"])
+    if args.paged:
+        ps, xs = eng.paged_stats, eng.pool.prefix.stats
+        log.info("paged cache: prefix hits=%d/%d tokens, kv detected=%d "
+                 "repaired=%d preemptions=%d evictions=%d",
+                 xs.hit_tokens, xs.lookup_tokens, ps.kv_detected_blocks,
+                 ps.kv_repaired_blocks, ps.preemptions,
+                 eng.pool.blocks.stats.evictions)
     for rid in sorted(outs):
         st = eng.telemetry.requests.get(rid)
         log.info("request %d: %d tokens, detected=%d corrected=%d retries=%d",

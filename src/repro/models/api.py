@@ -16,6 +16,17 @@ from repro.models.transformer import forward, init_params
 Z_LOSS = 1e-4
 
 
+def _last_logits(logits, lengths):
+    """(B, S, V) -> (B, V) at each row's true last token. ``lengths`` (B,)
+    supports ragged prompts padded to a common width (None = last column);
+    causality guarantees the gathered logits ignore the padding."""
+    if lengths is None:
+        return logits[:, -1, :]
+    idx = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1, 0,
+                   logits.shape[1] - 1)
+    return jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+
+
 class Model:
     """Thin, stateless handle: all methods are pure functions of params."""
 
@@ -113,12 +124,7 @@ class Model:
         logits, rep, _, new_cache = forward(params, self.cfg, batch, mesh=mesh,
                                             cache=cache, mode="prefill",
                                             fault=fault)
-        if lengths is None:
-            return logits[:, -1, :], rep, new_cache
-        idx = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1, 0,
-                       logits.shape[1] - 1)
-        last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
-        return last, rep, new_cache
+        return _last_logits(logits, lengths), rep, new_cache
 
     def decode_step(self, params, token, cache, *, mesh=None, fault=None):
         """token: (B, 1). Returns (logits (B, V), report, cache)."""
@@ -127,6 +133,27 @@ class Model:
                                             cache=cache, mode="decode",
                                             fault=fault)
         return logits[:, -1, :], rep, new_cache
+
+    def extend(self, params, tokens, cache, *, lengths=None, mesh=None,
+               fault=None):
+        """Chunked prefill: append ``tokens`` (B, S) at the cache's current
+        position, attending over the cached context *and* causally within the
+        chunk — a multi-token :meth:`decode_step`. This is what makes prefix
+        caching work: a prompt whose first ``pos`` tokens already sit in the
+        cache only pays for its suffix. Masked-out cache slots contribute
+        exactly zero to the attention accumulators, so the result is
+        bit-identical to prefilling the full sequence at once (same dtypes).
+
+        ``lengths`` (B,) gathers each row's logits at its true (unpadded)
+        last token, as in :meth:`prefill`. Positions past ``cache_len`` would
+        ring-wrap and clobber context — callers must keep
+        ``pos + S <= cache_len``. Returns (last logits, report, cache).
+        """
+        batch = {"tokens": tokens}
+        logits, rep, _, new_cache = forward(params, self.cfg, batch, mesh=mesh,
+                                            cache=cache, mode="decode",
+                                            fault=fault)
+        return _last_logits(logits, lengths), rep, new_cache
 
 
 def build_model(cfg: ModelConfig) -> Model:

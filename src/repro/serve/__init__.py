@@ -1,5 +1,7 @@
 from repro.serve.cache import KVCachePool
+from repro.serve.blocks import BlockPool, PrefixCache
 from repro.serve.engine import EngineStats, ServeEngine, batch_faults
+from repro.serve.paged import (PagedCacheStats, PagedKVPool, PagedServeEngine)
 from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import (ContinuousBatchingScheduler, Request,
                                    RequestState)

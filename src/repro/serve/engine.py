@@ -91,7 +91,7 @@ class ServeEngine:
         # SNVR analytic rowsum fallback (paper Case 3) bounds the error but
         # is not exact — treat such "corrections" as retry-worthy.
         self._exact_rowsum = cfg.ft.shadow_rowsum
-        self.pool = KVCachePool(model, n_slots, self.cache_len)
+        self.pool = self._make_pool()
         self.scheduler = ContinuousBatchingScheduler(n_slots)
         self.telemetry = ServeFaultTelemetry()
         self.stats = EngineStats()
@@ -106,6 +106,17 @@ class ServeEngine:
         self._decode = jax.jit(self._decode_fn)
         self._prefill = jax.jit(self._prefill_fn)
         self._no_faults = batch_faults(n_slots)  # reused every clean step
+
+    def _make_pool(self):
+        """Cache-pool factory; the paged engine overrides this."""
+        return KVCachePool(self.model, self.n_slots, self.cache_len)
+
+    def _try_admit(self, req: Request) -> Optional[int]:
+        """Reserve resources for one admission; None = cannot run yet."""
+        return self.pool.alloc()
+
+    def _release_request(self, req: Request) -> None:
+        self.pool.release(req.slot)
 
     # -- jitted computations ------------------------------------------------
 
@@ -234,7 +245,7 @@ class ServeEngine:
         requests that finished during this iteration. ``faults`` is an
         optional (n_slots, n_faults) SEU batch injected into this step's
         first decode attempt (retries re-execute clean)."""
-        decision = self.scheduler.step(self.pool.alloc, self.pool.release)
+        decision = self.scheduler.step(self._try_admit, self._release_request)
         for req in decision.admitted:
             self._admit(req)
         finished = list(decision.evicted)

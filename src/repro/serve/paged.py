@@ -1,0 +1,713 @@
+"""Fault-tolerant paged KV-cache serve engine (vLLM-style block pool).
+
+Replaces the per-slot ring caches with a **global block pool**: KV lives in
+fixed-size blocks ``(num_layers, num_blocks, Hkv, block_size, head_dim)``
+addressed through per-request block tables, so long prompts draw from a
+shared pool, identical prompt prefixes are stored once (hash-chain prefix
+cache + refcounted copy-on-write sharing in ``repro.serve.blocks``), and a
+preempted request frees exactly its blocks.
+
+The decode step gathers each slot's table into the contiguous layout the
+ring engine already decodes (``repro.kernels.ops.gather_block_kv``) — the
+same values at the same positions, so the paged engine is **token-identical**
+to the ring engine and to per-request sequential decoding.
+
+Fault story (the paper's resident-state gap): EFTA protects the attention
+*computation*, but KV sitting in HBM across thousands of decode steps is
+unprotected memory — one SEU in a cached K row silently poisons every later
+token. Here every block carries an ABFT-style checksum pair
+(``repro.core.checksum.encode_kv`` along the token axis) written on append
+and **verified on every gather into the decode step**, so a resident bit
+flip is detected *at read time* (site ``kv`` in the telemetry 6-vector). The
+repair is surgical: only the poisoned block is re-prefilled — a chunked
+``Model.extend`` over that block's tokens against the verified preceding
+blocks — then the step retries; a repaired shared prefix block heals every
+request mapping it.
+
+Prefix caching rides the same machinery: a prompt whose leading full blocks
+hash-chain-match resident blocks skips straight to ``Model.extend`` over its
+suffix (bit-identical to full prefill — masked cache slots contribute exactly
+zero), which is where the shared-system-prompt prefill speedup comes from.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import checksum as cks
+from repro.core.fault import FaultSpec, flip_bit_at
+from repro.kernels.ops import gather_block_kv
+from repro.models.api import Model
+from repro.models.attention import KVCache
+from repro.serve.blocks import NULL_BLOCK, BlockPool, PrefixCache
+from repro.serve.cache import add_unit_batch, drop_unit_batch
+from repro.serve.engine import ServeEngine
+from repro.serve.sampling import request_key, sample_tokens
+from repro.serve.scheduler import Request
+
+
+class PagedKVState(NamedTuple):
+    """Device-resident block pool. Row 0 of every array is the null block
+    (scratch for padded table entries — never verified, never read back)."""
+
+    k: jax.Array     # (L, num_blocks+1, Hkv, block_size, head_dim)
+    v: jax.Array
+    kc1: jax.Array   # (L, num_blocks+1, Hkv, check_stride, head_dim)
+    kc2: jax.Array
+    vc1: jax.Array
+    vc2: jax.Array
+
+
+@dataclasses.dataclass
+class PagedCacheStats:
+    kv_detected_blocks: int = 0    # block-checksum mismatches seen at gather
+    kv_repaired_blocks: int = 0    # blocks healed by re-prefill
+    preemptions: int = 0
+
+
+class PagedKVPool:
+    """Device arrays + host allocators for the paged cache.
+
+    Mirrors :class:`repro.serve.cache.KVCachePool`'s slot interface (the
+    engine still decodes a fixed ``n_slots``-wide batch) and adds the block
+    pool, block tables and prefix cache behind it.
+    """
+
+    def __init__(self, model: Model, n_slots: int, cache_len: int,
+                 block_size: int, num_blocks: int, check_stride: int):
+        cfg = model.cfg
+        a = cfg.attn
+        if cache_len % block_size:
+            raise ValueError("cache_len must be a multiple of block_size")
+        dtype = jnp.dtype(cfg.dtype)
+        L = cfg.num_layers
+        self.n_slots = n_slots
+        self.block_size = block_size
+        self.max_blocks = cache_len // block_size
+        self.num_blocks = num_blocks
+        self.check_stride = check_stride
+        kv_shape = (L, num_blocks + 1, a.num_kv_heads, block_size, a.head_dim)
+        ck_shape = (L, num_blocks + 1, a.num_kv_heads, check_stride,
+                    a.head_dim)
+        self.state = PagedKVState(
+            k=jnp.zeros(kv_shape, dtype), v=jnp.zeros(kv_shape, dtype),
+            kc1=jnp.zeros(ck_shape, dtype), kc2=jnp.zeros(ck_shape, dtype),
+            vc1=jnp.zeros(ck_shape, dtype), vc2=jnp.zeros(ck_shape, dtype))
+        self.blocks = BlockPool(num_blocks, block_size)
+        self.prefix = PrefixCache(self.blocks)
+        self._free_slots: List[int] = list(range(n_slots))
+
+    # -- slot lifetime (same contract as KVCachePool) -----------------------
+    @property
+    def free_slots(self) -> int:
+        return len(self._free_slots)
+
+    def alloc(self) -> Optional[int]:
+        return self._free_slots.pop(0) if self._free_slots else None
+
+    def release(self, slot: int) -> None:
+        if slot in self._free_slots:
+            raise ValueError(f"slot {slot} double-freed")
+        self._free_slots.append(slot)
+        self._free_slots.sort()
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    s = min(cap, n)
+    while n % s:
+        s -= 1
+    return s
+
+
+class PagedServeEngine(ServeEngine):
+    """Continuous-batching engine over a checksummed paged block pool.
+
+    Drop-in for :class:`ServeEngine` (same ``submit``/``step``/``run``), plus
+    ``inject_kv_fault`` for resident-state SEU campaigns. ``num_blocks``
+    defaults to ring-equivalent capacity (``n_slots * cache_len /
+    block_size``); give it headroom to keep evicted prompts' prefix blocks
+    resident for longer.
+    """
+
+    def __init__(self, model: Model, params, *, n_slots: int = 8,
+                 cache_len: Optional[int] = None, block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 check_stride: Optional[int] = None,
+                 check_threshold: Optional[float] = None,
+                 max_retries: int = 2, retry_on_detect: bool = True,
+                 min_prefill_bucket: int = 8):
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        cl = cache_len or model.cfg.max_seq
+        cl = -(-cl // block_size) * block_size     # round up to block grid
+        self.block_size = block_size
+        self.max_blocks = cl // block_size
+        self.num_blocks = num_blocks or n_slots * self.max_blocks
+        self.check_stride = check_stride or _largest_divisor_leq(block_size, 8)
+        if block_size % self.check_stride:
+            raise ValueError("check_stride must divide block_size")
+        if check_threshold is None:
+            check_threshold = (1e-3 if jnp.dtype(model.cfg.dtype)
+                               == jnp.float32 else 5e-2)
+        self.check_threshold = check_threshold
+        super().__init__(model, params, n_slots=n_slots, cache_len=cl,
+                         max_retries=max_retries,
+                         retry_on_detect=retry_on_detect,
+                         min_prefill_bucket=min_prefill_bucket)
+        self.paged_stats = PagedCacheStats()
+        # host mirrors of the device block tables / positions
+        self._bt = np.zeros((n_slots, self.max_blocks), np.int32)
+        self._pos = np.zeros((n_slots,), np.int32)
+        self._admit_seq = 0
+        # consecutive steps abandoned because corruption outlived repair
+        self._poisoned_steps = 0
+        self._gather_ctx = jax.jit(self._gather_ctx_fn)
+        self._extend = jax.jit(self._extend_fn)
+        self._scatter = jax.jit(self._scatter_fn)
+        self._copy_block = jax.jit(self._copy_block_fn)
+        self._flip = jax.jit(self._flip_fn, static_argnames=("into",))
+
+    def _make_pool(self) -> PagedKVPool:
+        return PagedKVPool(self.model, self.n_slots, self.cache_len,
+                           self.block_size, self.num_blocks,
+                           self.check_stride)
+
+    # -- jitted computations ------------------------------------------------
+
+    def _verify_gathered(self, state: PagedKVState, bt: jax.Array
+                         ) -> Tuple[Any, Any, jax.Array]:
+        """Gather K/V blocks for table ``bt`` (..., mb) and verify each block
+        against its resident checksums. Returns (k, v, bad): the contiguous
+        KV views attention consumes, and ``bad`` (..., mb) flagging real
+        (non-null) blocks with a mismatch in either operand's checksum
+        pair."""
+        kraw, kg = gather_block_kv(state.k, bt)
+        vraw, vg = gather_block_kv(state.v, bt)
+        s = self.check_stride
+        thr = self.check_threshold
+        bad_k, _ = cks.verify_block(
+            kraw, cks.Checksums(state.kc1[:, bt], state.kc2[:, bt]), s,
+            threshold=thr)
+        bad_v, _ = cks.verify_block(
+            vraw, cks.Checksums(state.vc1[:, bt], state.vc2[:, bt]), s,
+            threshold=thr)
+        # reduce (L, ..., mb, Hkv) over layers and heads -> (..., mb)
+        bad = jnp.any(bad_k | bad_v, axis=(0, -1)) & (bt > NULL_BLOCK)
+        return kg, vg, bad
+
+    def _decode_fn(self, params, tokens, state, bt, pos, faults, temps,
+                   topks, seeds, rids, counters):
+        """One batched paged decode step: gather-by-block-table, read-time
+        checksum verify, vmapped EFTA decode, append + checksum update."""
+        cfg = self.model.cfg
+        a = cfg.attn
+        L, ns, bs = cfg.num_layers, self.n_slots, self.block_size
+        kg, vg, bad = self._verify_gathered(state, bt)   # (L,ns,Hkv,mb*bs,hd)
+        czero = jnp.zeros((L, ns, a.num_kv_heads, 1, a.head_dim), kg.dtype)
+        cache = {"attn": KVCache(
+            k=kg, v=vg, pos=jnp.broadcast_to(pos[None], (L, ns)),
+            ck=czero, cv=czero)}
+        axes = jax.tree.map(lambda _: 1, cache)
+
+        def one(tok, row, f):
+            logits, rep, new_row = self.model.decode_step(
+                params, tok[None, None], add_unit_batch(row), fault=f)
+            return logits[0], rep, drop_unit_batch(new_row)
+
+        logits, rep, new_cache = jax.vmap(
+            one, in_axes=(0, axes, 0), out_axes=(0, 0, axes))(
+                tokens, cache, faults)
+
+        # append: pull the row each slot just wrote at its position and
+        # scatter it into that slot's tail block, then refresh the tail
+        # block's checksums (appends are writes; verification happens at the
+        # *next* gather).
+        idx = pos[None, :, None, None, None]
+        row_k = jnp.take_along_axis(new_cache["attn"].k, idx, axis=3)[..., 0, :]
+        row_v = jnp.take_along_axis(new_cache["attn"].v, idx, axis=3)[..., 0, :]
+        tgt = jnp.take_along_axis(bt, (pos // bs)[:, None], axis=1)[:, 0]
+        off = pos % bs
+        new_k = state.k.at[:, tgt, :, off, :].set(row_k.transpose(1, 0, 2, 3))
+        new_v = state.v.at[:, tgt, :, off, :].set(row_v.transpose(1, 0, 2, 3))
+        ck = cks.encode_kv(new_k[:, tgt], self.check_stride)
+        cv = cks.encode_kv(new_v[:, tgt], self.check_stride)
+        new_state = PagedKVState(
+            k=new_k, v=new_v,
+            kc1=state.kc1.at[:, tgt].set(ck.c1),
+            kc2=state.kc2.at[:, tgt].set(ck.c2),
+            vc1=state.vc1.at[:, tgt].set(cv.c1),
+            vc2=state.vc2.at[:, tgt].set(cv.c2))
+
+        def key_of(seed, rid, counter):
+            return jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(seed), rid), counter)
+
+        keys = jax.vmap(key_of)(seeds, rids, counters)
+        next_tokens = sample_tokens(logits, temperature=temps, top_k=topks,
+                                    keys=keys)
+        return next_tokens, rep, bad, new_state
+
+    def _gather_ctx_fn(self, state, bids, n_ctx):
+        """Materialize a batch-1 contiguous context cache from ``bids`` (mb,)
+        holding ``n_ctx`` tokens, verifying the blocks read."""
+        cfg = self.model.cfg
+        a = cfg.attn
+        L = cfg.num_layers
+        kg, vg, bad = self._verify_gathered(state, bids)
+        in_ctx = jnp.arange(self.max_blocks) * self.block_size < n_ctx
+        bad = bad & in_ctx
+        kg = kg[:, None]                        # (L, 1, Hkv, cache_len, hd)
+        vg = vg[:, None]
+        czero = jnp.zeros((L, 1, a.num_kv_heads, 1, a.head_dim), kg.dtype)
+        row = {"attn": KVCache(
+            k=kg, v=vg, pos=jnp.full((L,), n_ctx, jnp.int32),
+            ck=czero, cv=czero)}
+        return row, bad
+
+    def _extend_fn(self, params, tokens, row_cache, length, fault):
+        return self.model.extend(params, tokens, row_cache,
+                                 lengths=length, fault=fault)
+
+    def _scatter_fn(self, state, row_cache, bids, length):
+        """Write a batch-1 cache's rows into pool blocks. ``bids`` (mb,)
+        names the destination of each block-sized row group (null entries
+        discard that group); rows at positions >= ``length`` are zeroed, so a
+        partial tail block is stored zero-padded and its checksums cover the
+        padding deterministically."""
+        mb, bs = self.max_blocks, self.block_size
+        node = row_cache["attn"]
+        mask = (jnp.arange(mb * bs) < length)[None, None, :, None]
+
+        def blocks_of(x):      # (L, 1, Hkv, cache_len, hd) -> (L,mb,Hkv,bs,hd)
+            x = jnp.where(mask, x[:, 0], 0.0)
+            L, hkv, _, hd = x.shape
+            return x.reshape(L, hkv, mb, bs, hd).transpose(0, 2, 1, 3, 4)
+
+        kb = blocks_of(node.k)
+        vb = blocks_of(node.v)
+        ck = cks.encode_kv(kb, self.check_stride)
+        cv = cks.encode_kv(vb, self.check_stride)
+        return PagedKVState(
+            k=state.k.at[:, bids].set(kb),
+            v=state.v.at[:, bids].set(vb),
+            kc1=state.kc1.at[:, bids].set(ck.c1),
+            kc2=state.kc2.at[:, bids].set(ck.c2),
+            vc1=state.vc1.at[:, bids].set(cv.c1),
+            vc2=state.vc2.at[:, bids].set(cv.c2))
+
+    def _copy_block_fn(self, state, src, dst):
+        """Copy-on-write device copy: duplicate block ``src`` (data +
+        checksums) into ``dst``."""
+        return PagedKVState(*(arr.at[:, dst].set(arr[:, src])
+                              for arr in state))
+
+    def _flip_fn(self, state, layer, bid, head, row, col, bit, *, into):
+        """Flip one bit of a resident pool block — an SEU striking KV state
+        in HBM between decode steps."""
+        arr = getattr(state, into)
+        L, nb, hkv, bs, hd = arr.shape
+        layer = jnp.clip(layer, 0, L - 1)
+        bid = jnp.clip(bid, 0, nb - 1)
+        head = jnp.clip(head, 0, hkv - 1)
+        row = jnp.clip(row, 0, bs - 1)
+        col = jnp.clip(col, 0, hd - 1)
+        flat = (((layer * nb + bid) * hkv + head) * bs + row) * hd + col
+        return state._replace(**{into: flip_bit_at(arr, flat, bit)})
+
+    # -- resident-state fault injection -------------------------------------
+
+    def inject_kv_fault(self, *, layer: int = 0, block: int = 1,
+                        head: int = 0, row: int = 0, col: int = 0,
+                        bit: int = 27, into: str = "k") -> None:
+        """Flip one bit of pool block ``block`` (``into``: "k" | "v"). The
+        corruption is persistent resident-state damage: it stays until the
+        block checksums catch it at the next gather and the engine re-prefills
+        the block."""
+        if into not in ("k", "v"):
+            raise ValueError("into must be 'k' or 'v'")
+        self.pool.state = self._flip(
+            self.pool.state, jnp.int32(layer), jnp.int32(block),
+            jnp.int32(head), jnp.int32(row), jnp.int32(col), jnp.int32(bit),
+            into=into)
+
+    # -- admission ----------------------------------------------------------
+
+    def _resident_tokens(self, req: Request) -> np.ndarray:
+        """Tokens whose KV this request keeps resident: the prompt plus all
+        generated tokens except the pending one (written next step)."""
+        gen = req.generated[:-1] if req.generated else []
+        return np.concatenate([req.prompt,
+                               np.asarray(gen, np.int32)]).astype(np.int32)
+
+    def _pad_bids(self, bids: Sequence[int]) -> np.ndarray:
+        out = np.zeros((self.max_blocks,), np.int32)
+        out[:len(bids)] = bids
+        return out
+
+    def _try_admit(self, req: Request) -> Optional[int]:
+        """Reserve a slot + KV blocks (prefix-cache hits first). All-or-
+        nothing: on failure everything is rolled back and the request keeps
+        its place at the head of the queue."""
+        if self.pool.free_slots == 0:
+            return None
+        seq = self._resident_tokens(req)
+        t_ctx = len(seq)
+        resumed = req.num_generated > 0
+        # a fresh prompt must compute >= 1 token to produce logits; a resumed
+        # request already knows its pending token and may be fully cached
+        max_hit = t_ctx // self.block_size if resumed \
+            else (t_ctx - 1) // self.block_size
+        hits = self.pool.prefix.match(seq, max_blocks=max_hit)
+        for b in hits:                      # claim before alloc can evict
+            self.pool.blocks.ref_inc(b)
+        n_needed = -(-t_ctx // self.block_size) - len(hits)
+        new_bids: List[int] = []
+        for _ in range(n_needed):
+            b = self.pool.blocks.alloc()
+            if b is None:
+                for nb in new_bids:
+                    self.pool.blocks.ref_dec(nb)
+                for h in hits:
+                    self.pool.blocks.ref_dec(h)
+                return None
+            new_bids.append(b)
+        slot = self.pool.alloc()
+        req.block_ids = list(hits) + new_bids
+        req.n_prefix_hit = len(hits)
+        return slot
+
+    def _release_request(self, req: Request) -> None:
+        slot = req.slot
+        for b in req.block_ids:
+            self.pool.blocks.ref_dec(b)
+        req.block_ids = []
+        self._bt[slot] = 0
+        self._pos[slot] = 0
+        self.pool.release(slot)
+
+    def _admit(self, req: Request) -> None:
+        seq = self._resident_tokens(req)
+        t_ctx = len(seq)
+        resumed = req.num_generated > 0
+        n_hit = req.n_prefix_hit
+        t_hit = n_hit * self.block_size
+        slot = req.slot
+        none = FaultSpec.none(1)
+        det_acc = np.zeros((6,), np.int64)
+        cor_acc = np.zeros((6,), np.int64)
+        retries = 0
+        logits = None
+
+        if t_hit == t_ctx:
+            pass                            # resumed & fully cached: no math
+        elif n_hit == 0:
+            t = t_ctx
+            lp = max(self._bucket(t), t)
+            padded = np.zeros((1, lp), np.int32)
+            padded[0, :t] = seq
+            row = self.model.init_cache(1, cache_len=self.cache_len)
+            length = jnp.asarray([t], jnp.int32)
+            logits, rep, new_row = self._prefill(
+                self.params, jnp.asarray(padded), row, length, none)
+            det_acc[:5] += np.asarray(rep.detected, np.int64).reshape(-1)[:5]
+            cor_acc[:5] += np.asarray(rep.corrected, np.int64).reshape(-1)[:5]
+            while self._needs_retry_rows(rep, rows=None) and \
+                    retries < self.max_retries:
+                retries += 1
+                logits, rep, new_row = self._prefill(
+                    self.params, jnp.asarray(padded), row, length, none)
+                det_acc[:5] += np.asarray(rep.detected).reshape(-1)[:5]
+                cor_acc[:5] += np.asarray(rep.corrected).reshape(-1)[:5]
+            self.pool.state = self._scatter(
+                self.pool.state, new_row, jnp.asarray(self._pad_bids(
+                    req.block_ids)), jnp.int32(t_ctx))
+        else:
+            ctx_bids = jnp.asarray(self._pad_bids(req.block_ids[:n_hit]))
+            slen = t_ctx - t_hit
+            sb = min(max(self._bucket(slen), slen), self.cache_len - t_hit)
+            toks = np.zeros((1, sb), np.int32)
+            toks[0, :slen] = seq[t_hit:]
+            length = jnp.asarray([slen], jnp.int32)
+            while True:
+                row, bad = self._gather_ctx(self.pool.state, ctx_bids,
+                                            jnp.int32(t_hit))
+                bad_idx = np.flatnonzero(np.asarray(bad))
+                if bad_idx.size == 0:
+                    break
+                # a shared prefix block rotted in HBM: repair before reuse
+                det_acc[5] += bad_idx.size
+                cor_acc[5] += bad_idx.size
+                self.paged_stats.kv_detected_blocks += int(bad_idx.size)
+                self._repair_blocks(req, bad_idx, resident=seq)
+            logits, rep, new_row = self._extend(
+                self.params, jnp.asarray(toks), row, length, none)
+            det_acc[:5] += np.asarray(rep.detected, np.int64).reshape(-1)[:5]
+            cor_acc[:5] += np.asarray(rep.corrected, np.int64).reshape(-1)[:5]
+            while self._needs_retry_rows(rep, rows=None) and \
+                    retries < self.max_retries:
+                retries += 1
+                logits, rep, new_row = self._extend(
+                    self.params, jnp.asarray(toks), row, length, none)
+                det_acc[:5] += np.asarray(rep.detected).reshape(-1)[:5]
+                cor_acc[:5] += np.asarray(rep.corrected).reshape(-1)[:5]
+            sc = [NULL_BLOCK] * n_hit + req.block_ids[n_hit:]
+            self.pool.state = self._scatter(
+                self.pool.state, new_row, jnp.asarray(self._pad_bids(sc)),
+                jnp.int32(t_ctx))
+
+        self.pool.prefix.insert(seq, req.block_ids)
+        self.telemetry.observe_prefill(req.rid, det_acc, cor_acc,
+                                       retries=retries)
+        req.retries += retries
+        req.admit_order = self._admit_seq
+        self._admit_seq += 1
+        self.stats.prefills += 1
+        self.stats.retries += retries
+
+        s = req.sampling
+        if resumed:
+            tok = req.generated[-1]
+            self._counters[slot] = req.num_generated
+        else:
+            key = jax.random.fold_in(request_key(s, req.rid), 0)
+            first = sample_tokens(
+                logits.astype(jnp.float32),
+                temperature=jnp.asarray([s.temperature], jnp.float32),
+                top_k=jnp.asarray([s.top_k], jnp.int32), keys=key[None])
+            tok = int(first[0])
+            req.generated.append(tok)
+            self._counters[slot] = 1
+            self.stats.tokens += 1
+        self._pending[slot] = tok
+        self._temps[slot] = s.temperature
+        self._topks[slot] = s.top_k
+        self._seeds[slot] = s.seed
+        self._rids[slot] = req.rid
+        self._bt[slot] = self._pad_bids(req.block_ids)
+        self._pos[slot] = t_ctx
+
+    # -- pressure: tail blocks, COW, preemption -----------------------------
+
+    def _preempt_for_blocks(self, needy: Request) -> bool:
+        """Preempt the youngest other running request to free blocks."""
+        victims = [r for r in self.scheduler.active_rows()
+                   if r is not needy and not r.is_done()]
+        if not victims:
+            return False
+        victim = max(victims, key=lambda r: r.admit_order)
+        slot = victim.slot
+        self.scheduler.preempt(victim)
+        self._release_request(victim)
+        victim.slot = None
+        self.paged_stats.preemptions += 1
+        return True
+
+    def _alloc_block_or_preempt(self, req: Request) -> int:
+        while True:
+            b = self.pool.blocks.alloc()
+            if b is not None:
+                return b
+            if not self._preempt_for_blocks(req):
+                raise RuntimeError(
+                    "paged KV pool exhausted: a single request needs more "
+                    "blocks than the pool holds; raise num_blocks")
+
+    def _ensure_tail_blocks(self) -> None:
+        """Before a decode step every active slot writes one KV row at its
+        position — make sure a private tail block backs it (allocating, or
+        copy-on-write-splitting a shared tail), preempting under pressure."""
+        for req in list(self.scheduler.active_rows()):
+            if req.slot is None:
+                continue        # preempted by an earlier request's alloc
+            slot = req.slot
+            if req.is_done():
+                # finished at admission; decodes garbage until evicted next
+                # iteration — point its writes at the null block
+                self._bt[slot] = 0
+                self._pos[slot] = 0
+                continue
+            bi = int(self._pos[slot]) // self.block_size
+            if bi >= len(req.block_ids):
+                b = self._alloc_block_or_preempt(req)
+                if req.slot is None:        # preempted itself — impossible,
+                    continue                # _preempt_for_blocks skips req
+                req.block_ids.append(b)
+                self._bt[slot, bi] = b
+            else:
+                tail = req.block_ids[bi]
+                if self.pool.blocks.is_shared(tail):
+                    wb, needs_copy = self.pool.blocks.cow(tail)
+                    if wb is None:
+                        wb = self._alloc_block_or_preempt(req)
+                        self.pool.blocks.ref_dec(tail)
+                        needs_copy = True
+                    if needs_copy:
+                        self.pool.state = self._copy_block(
+                            self.pool.state, jnp.int32(tail), jnp.int32(wb))
+                    req.block_ids[bi] = wb
+                    self._bt[slot, bi] = wb
+
+    # -- read-time repair ---------------------------------------------------
+
+    def _repair_blocks(self, req: Request, bad_idx, *,
+                       resident: Optional[np.ndarray] = None,
+                       healed: Optional[set] = None) -> None:
+        """Re-prefill the poisoned blocks of one request, left to right, so
+        each repair runs against already-verified (or just-repaired) context.
+        Shared blocks heal in place for every request mapping them (``healed``
+        dedupes repairs of a shared block flagged from several slots)."""
+        bs = self.block_size
+        seq = self._resident_tokens(req) if resident is None else resident
+        none = FaultSpec.none(1)
+        for j in sorted(int(i) for i in bad_idx):
+            start = j * bs
+            n_fill = min(bs, len(seq) - start)
+            if n_fill <= 0:
+                continue
+            if healed is not None:
+                if req.block_ids[j] in healed:
+                    continue
+                healed.add(req.block_ids[j])
+            ctx_bids = jnp.asarray(self._pad_bids(req.block_ids[:j]))
+            row, _ = self._gather_ctx(self.pool.state, ctx_bids,
+                                      jnp.int32(start))
+            sb = min(max(self._bucket(n_fill), n_fill),
+                     self.cache_len - start)
+            toks = np.zeros((1, sb), np.int32)
+            toks[0, :n_fill] = seq[start:start + n_fill]
+            _, _, new_row = self._extend(
+                self.params, jnp.asarray(toks), row,
+                jnp.asarray([n_fill], jnp.int32), none)
+            sc = [NULL_BLOCK] * self.max_blocks
+            sc[j] = req.block_ids[j]
+            self.pool.state = self._scatter(
+                self.pool.state, new_row, jnp.asarray(sc, dtype=jnp.int32),
+                jnp.int32(start + n_fill))
+            self.paged_stats.kv_repaired_blocks += 1
+
+    # -- stepping -----------------------------------------------------------
+
+    def step(self, faults: Optional[FaultSpec] = None) -> List[Request]:
+        """One engine iteration. EFTA in-compute SEUs behave exactly as in
+        the ring engine; additionally every gathered KV block is checksum-
+        verified, and a mismatch triggers block re-prefill + step retry
+        before anything is committed."""
+        decision = self.scheduler.step(self._try_admit, self._release_request)
+        for req in decision.admitted:
+            self._admit(req)
+        finished = list(decision.evicted)
+        self._ensure_tail_blocks()
+        active_reqs = [r for r in self.scheduler.active_rows()
+                       if not r.is_done()]
+        if not active_reqs:
+            return finished
+        active = [r.slot for r in active_reqs]
+        by_slot = {r.slot: r for r in active_reqs}
+
+        if faults is None:
+            faults = self._no_faults
+        kv_det = np.zeros((self.n_slots,), np.int64)
+        kv_cor = np.zeros((self.n_slots,), np.int64)
+        efta_retries = 0
+        kv_retries = 0
+        attempt_faults = faults
+        det_acc = np.zeros((self.n_slots, 5), np.int64)
+        cor_acc = np.zeros((self.n_slots, 5), np.int64)
+        seen_bad: set = set()
+        while True:
+            args = (jnp.asarray(self._pending), self.pool.state,
+                    jnp.asarray(self._bt), jnp.asarray(self._pos),
+                    attempt_faults, jnp.asarray(self._temps),
+                    jnp.asarray(self._topks), jnp.asarray(self._seeds),
+                    jnp.asarray(self._rids), jnp.asarray(self._counters))
+            next_tokens, rep, bad, new_state = self._decode(self.params, *args)
+            det_acc += np.asarray(rep.detected, np.int64)
+            cor_acc += np.asarray(rep.corrected, np.int64)
+            bad_np = np.asarray(bad)
+            kv_hit_slots = [s for s in active if bad_np[s].any()]
+            if kv_hit_slots:
+                # resident corruption: the attempt read poisoned KV — repair
+                # the blocks, drop the attempt (nothing committed), retry.
+                # KV retries have their own (>= 1) budget independent of the
+                # EFTA one: committing an attempt derived from a poisoned
+                # gather would bake the corruption into the tail block's
+                # refreshed checksums and make it permanently undetectable.
+                kv_det[kv_hit_slots] += bad_np[kv_hit_slots].sum(-1)
+                # pool-level stats count distinct *blocks*, once per step (a
+                # shared prefix block flagged from several slots, or again on
+                # a retry, is one corruption), so detected == repaired holds
+                # under sharing; per-request telemetry above stays per-slot
+                bad_bids = {by_slot[s].block_ids[j] for s in kv_hit_slots
+                            for j in np.flatnonzero(bad_np[s])}
+                self.paged_stats.kv_detected_blocks += \
+                    len(bad_bids - seen_bad)
+                seen_bad |= bad_bids
+                healed: set = set()
+                for s in kv_hit_slots:
+                    idxs = np.flatnonzero(bad_np[s])
+                    kv_cor[s] += idxs.size
+                    self._repair_blocks(by_slot[s], idxs, healed=healed)
+                if kv_retries < max(1, self.max_retries):
+                    kv_retries += 1
+                    attempt_faults = self._no_faults
+                    continue
+            if self._needs_retry_rows(rep, rows=active) and \
+                    efta_retries < self.max_retries:
+                efta_retries += 1
+                attempt_faults = self._no_faults
+                continue
+            break
+        retries = efta_retries + kv_retries
+
+        if kv_hit_slots:
+            # the FINAL attempt still read poisoned KV: a block that stays
+            # corrupted through repeated re-prefills is being re-corrupted
+            # underneath us (failing HBM, not a transient SEU). Committing
+            # would bake the corruption into refreshed tail checksums and go
+            # permanently silent — so commit nothing: repairs stay applied,
+            # pending tokens are untouched, the next engine iteration
+            # re-attempts, and the sustained detections drive the
+            # FaultRateMonitor toward its "cordon" escalation.
+            per_request = {
+                r.rid: (np.concatenate([det_acc[r.slot],
+                                        kv_det[r.slot:r.slot + 1]]),
+                        np.concatenate([cor_acc[r.slot],
+                                        kv_cor[r.slot:r.slot + 1]]))
+                for r in active_reqs}
+            for r in active_reqs:
+                r.retries += retries
+            self.telemetry.observe_step(per_request, retries=retries)
+            self.stats.retries += retries
+            self._poisoned_steps += 1
+            if self._poisoned_steps > 3:
+                raise RuntimeError(
+                    "resident KV corruption persists across block re-prefills "
+                    "on consecutive steps — failing memory, not a transient "
+                    "SEU; cordon this host and restart elsewhere")
+            return finished
+
+        # commit
+        self._poisoned_steps = 0
+        self.pool.state = new_state
+        next_np = np.asarray(next_tokens)
+        per_request = {}
+        for req in active_reqs:
+            slot = req.slot
+            tok = int(next_np[slot])
+            req.generated.append(tok)
+            req.retries += retries
+            self._pending[slot] = tok
+            self._counters[slot] += 1
+            self._pos[slot] += 1
+            per_request[req.rid] = (
+                np.concatenate([det_acc[slot], kv_det[slot:slot + 1]]),
+                np.concatenate([cor_acc[slot], kv_cor[slot:slot + 1]]))
+            self.stats.tokens += 1
+        self.telemetry.observe_step(per_request, retries=retries)
+        self.stats.steps += 1
+        self.stats.retries += retries
+        return finished

@@ -39,6 +39,13 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     # number of engine decode-step retries this request sat through
     retries: int = 0
+    # paged engine: pool block ids backing this request's KV, table order
+    block_ids: List[int] = dataclasses.field(default_factory=list)
+    # paged engine: leading block_ids that came from the prefix cache
+    n_prefix_hit: int = 0
+    # paged engine: monotone admission sequence (preemption picks the
+    # youngest victim; -1 = never admitted)
+    admit_order: int = -1
 
     @property
     def prompt_len(self) -> int:
@@ -79,31 +86,53 @@ class ContinuousBatchingScheduler:
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
 
-    def step(self, alloc_slot, release_slot) -> ScheduleDecision:
-        """One scheduling iteration. ``alloc_slot``/``release_slot`` are the
-        cache pool's slot allocator callbacks."""
+    def step(self, try_admit, release) -> ScheduleDecision:
+        """One scheduling iteration.
+
+        ``try_admit(req) -> Optional[slot]`` attempts to reserve every
+        resource the request needs (cache slot, and for the paged engine its
+        KV blocks); None means the request cannot run *yet*. A failed
+        admission leaves the request at the **head** of the queue and stops
+        admitting — FCFS means head-of-line blocking, never queue-jumping: a
+        request that repeatedly fails allocation keeps its position, and a
+        smaller request behind it must wait its turn. ``release(req)`` frees
+        a finished request's resources (called while ``req.slot`` is still
+        set).
+        """
         evicted: List[Request] = []
         for slot in sorted(self.running):
             req = self.running[slot]
             if req.is_done():
                 req.state = RequestState.FINISHED
                 del self.running[slot]
-                release_slot(slot)
+                release(req)
                 req.slot = None
                 self.finished.append(req)
                 evicted.append(req)
 
         admitted: List[Request] = []
         while self.waiting:
-            slot = alloc_slot()
+            req = self.waiting[0]
+            slot = try_admit(req)
             if slot is None:
-                break
-            req = self.waiting.popleft()
+                break       # head keeps its FCFS position for the next step
+            self.waiting.popleft()
             req.slot = slot
             req.state = RequestState.RUNNING
             self.running[slot] = req
             admitted.append(req)
         return ScheduleDecision(admitted=admitted, evicted=evicted)
+
+    def preempt(self, req: Request) -> None:
+        """Push a running request back to the *front* of the waiting queue
+        (pool pressure). Its resources are the caller's to release; it keeps
+        its generated tokens and resumes from them on re-admission, and it is
+        first in line — preemption must not cost a request its FCFS turn."""
+        if req.state is not RequestState.RUNNING:
+            raise ValueError(f"request {req.rid} is not running")
+        del self.running[req.slot]
+        req.state = RequestState.WAITING
+        self.waiting.appendleft(req)
 
     def active_rows(self) -> Sequence[Request]:
         return [self.running[s] for s in sorted(self.running)]

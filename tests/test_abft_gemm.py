@@ -6,6 +6,8 @@ import pytest
 
 from repro.core import FaultSpec, Site, abft_matmul, tensor_abft_matmul
 
+pytestmark = pytest.mark.quick
+
 
 @pytest.mark.parametrize("fn", [abft_matmul, tensor_abft_matmul])
 @pytest.mark.parametrize("m,k,n", [(8, 64, 128), (16, 32, 64), (4, 16, 24)])

@@ -10,6 +10,8 @@ from _propcheck import given, settings, st
 
 from repro.core import checksum as cks
 
+pytestmark = pytest.mark.quick
+
 jax.config.update("jax_enable_x64", False)
 
 
@@ -107,3 +109,52 @@ def test_interleaved_multi_error_advantage():
     bad2 = x.at[1, 2].add(5.0).at[1, 2 + stride].add(3.0)
     v2 = cks.verify_and_correct(bad2, checks, stride, threshold=0.25)
     assert not np.allclose(v2.corrected, x, atol=1e-3)
+
+
+def test_verify_block_detects_resident_corruption():
+    """Memory-integrity check of a stored KV block: recomputed folds vs
+    resident checksums catch a single-element bit-flip-scale change in the
+    block data or in the checksum itself."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((3, 16, 8)), jnp.float32)  # 3 blocks
+    checks = cks.encode_kv(x, 4)
+    bad, n = cks.verify_block(x, checks, 4, threshold=1e-3)
+    assert int(n) == 0                        # clean data: no false positives
+    flipped = x.at[1, 5, 2].multiply(-3.0)
+    bad, n = cks.verify_block(flipped, checks, 4, threshold=1e-3)
+    assert int(n) == 1
+    assert np.asarray(bad).tolist() == [False, True, False]
+    # a flip in the *checksum* is equally a detection (can't tell apart)
+    bad2, n2 = cks.verify_block(
+        x, cks.Checksums(checks.c1.at[0, 0, 0].add(50.0), checks.c2), 4,
+        threshold=1e-3)
+    assert int(n2) == 1 and bool(np.asarray(bad2)[0])
+    # NaN corruption (exponent-bit upset) is detected, not compared-False
+    bad3, n3 = cks.verify_block(x.at[2, 0, 0].set(jnp.nan), checks, 4,
+                                threshold=1e-3)
+    assert bool(np.asarray(bad3)[2])
+
+
+def test_log_domain_product_check_covers_underflowed_columns():
+    """ROADMAP EXP-coverage closure: a corruption of a *large* P entry in a
+    fold column whose product underflows escapes the linear product check
+    (prod ~ 0 == check ~ 0) but must be caught by the log-domain fold."""
+    stride = 4
+    p_true = np.array([[0.9, 0.8, 0.7, 0.6,
+                        np.exp(-60.0), 0.5, 0.4, 0.3]], np.float32)
+    log_check = cks.fold1(jnp.log(jnp.asarray(p_true)), stride)
+    p_bad = p_true.copy()
+    p_bad[0, 0] = 0.0                          # large entry wiped by an SEU
+    # linear-domain check: both products are ~1e-40 -> blind
+    p_check = cks.foldprod(jnp.asarray(p_true), stride)
+    bad_lin, n_lin = cks.verify_product(jnp.asarray(p_bad), p_check, stride,
+                                        threshold=1e-3)
+    assert not bool(np.asarray(bad_lin)[0, 0])
+    # log-domain check: sum of logs mismatches by ~100 nats -> detected
+    bad_log, n_log = cks.verify_product_log(jnp.asarray(p_bad), log_check,
+                                            stride, threshold=1e-3)
+    assert bool(np.asarray(bad_log)[0, 0])
+    # and no false positive on clean data
+    ok, n_ok = cks.verify_product_log(jnp.asarray(p_true), log_check, stride,
+                                      threshold=1e-3)
+    assert int(n_ok) == 0

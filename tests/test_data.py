@@ -2,6 +2,9 @@
 import numpy as np
 
 from repro.data import DataConfig, SyntheticLM
+import pytest
+
+pytestmark = pytest.mark.quick
 
 
 def test_deterministic_by_step():

@@ -3,8 +3,12 @@ import jax.numpy as jnp
 import jax
 import numpy as np
 
+import pytest
+
 from repro.core import (FaultSpec, Site, decoupled_ft_attention,
                         decoupled_memory_bytes, reference_attention)
+
+pytestmark = pytest.mark.quick
 
 
 def test_matches_reference():

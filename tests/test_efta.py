@@ -7,6 +7,8 @@ import pytest
 from repro.core import (EFTAConfig, FaultSpec, Site, efta_attention,
                         reference_attention)
 
+pytestmark = pytest.mark.quick
+
 CFG = EFTAConfig(mode="correct", stride=8, block_kv=16)
 
 

@@ -7,6 +7,8 @@ import pytest
 
 from repro.core import DEFAULT_SITES, Site, run_campaign
 
+pytestmark = pytest.mark.quick
+
 N = 50
 BITS = (20, 30)  # high bits: corruptions visible above the damage tolerance
 

@@ -9,6 +9,8 @@ from repro.ft_runtime import (AsyncCheckpointer, FaultRateMonitor,
                               MeshPlan, StragglerMonitor, latest_step,
                               plan_mesh, restore, save)
 
+pytestmark = pytest.mark.quick
+
 
 def test_checkpoint_roundtrip(tmp_path):
     tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),

@@ -7,6 +7,8 @@ import pytest
 from repro.configs.base import MoECfg
 from repro.models.moe import moe_apply, moe_init
 
+pytestmark = pytest.mark.quick
+
 
 def setup(cf=8.0):
     m = MoECfg(num_experts=8, top_k=2, expert_d_ff=32, capacity_factor=cf)

@@ -4,6 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.optim import AdamW, warmup_cosine
+import pytest
+
+pytestmark = pytest.mark.quick
 
 
 def test_adamw_matches_reference():

@@ -1,0 +1,336 @@
+"""Paged KV-cache subsystem: host-side block/prefix bookkeeping, token
+identity of the paged engine against the ring engine, read-time checksum
+detection of resident KV corruption with block re-prefill repair, prefix-
+cache hit/miss token identity, and eviction/preemption under pool pressure."""
+import numpy as np
+import pytest
+
+from repro.serve.blocks import NULL_BLOCK, BlockPool, PrefixCache, chain_hash
+
+pytestmark = pytest.mark.quick
+
+
+# ---------------------------------------------------------------------------
+# host-side bookkeeping (no jax)
+# ---------------------------------------------------------------------------
+
+def test_block_pool_alloc_free_refcounts():
+    pool = BlockPool(3, 4)
+    a, b, c = pool.alloc(), pool.alloc(), pool.alloc()
+    assert sorted((a, b, c)) == [1, 2, 3]       # 0 is the null block
+    assert NULL_BLOCK not in (a, b, c)
+    assert pool.alloc() is None                 # exhausted, nothing evictable
+    pool.ref_inc(a)
+    assert pool.ref_of(a) == 2 and pool.is_shared(a)
+    pool.ref_dec(a)
+    assert pool.ref_of(a) == 1 and not pool.is_shared(a)
+    pool.ref_dec(b)
+    assert pool.free_blocks == 1
+    d = pool.alloc()
+    assert d == b                               # freed id is reusable
+    pool.ref_dec(a)
+    pool.ref_dec(c)
+    pool.ref_dec(d)
+    with pytest.raises(ValueError):
+        pool.ref_dec(d)                         # double free
+
+
+def test_block_pool_cow_splits_shared_blocks():
+    pool = BlockPool(4, 4)
+    a = pool.alloc()
+    # private block: write-through, no copy
+    assert pool.cow(a) == (a, False)
+    pool.ref_inc(a)                             # second holder
+    wb, needs_copy = pool.cow(a)
+    assert needs_copy and wb not in (a, NULL_BLOCK)
+    assert pool.ref_of(a) == 1 and pool.ref_of(wb) == 1
+    assert pool.stats.cow_copies == 1
+    # registered (prefix-cached) blocks also require COW even at ref == 1
+    b = pool.alloc()
+    pool.register(b, chain_hash(None, (1, 2, 3, 4)))
+    assert pool.is_shared(b)
+    wb2, needs_copy2 = pool.cow(b)
+    assert needs_copy2 and wb2 != b
+
+
+def test_block_pool_parks_and_evicts_cached_blocks_lru():
+    evicted = []
+    pool = BlockPool(2, 4)
+    pool.on_evict = lambda bid, h: evicted.append((bid, h))
+    a, b = pool.alloc(), pool.alloc()
+    ha, hb = chain_hash(None, (1,) * 4), chain_hash(None, (2,) * 4)
+    pool.register(a, ha)
+    pool.register(b, hb)
+    pool.ref_dec(a)                             # parked, evictable
+    pool.ref_dec(b)
+    assert pool.free_blocks == 2
+    pool.touch(a)                               # refresh a: b is now LRU...
+    # (a was parked first; touch moves it to MRU, so b is still newer)
+    c = pool.alloc()                            # pressure: evict LRU
+    assert c == b or c == a
+    assert evicted and evicted[0][1] in (ha, hb)
+    assert pool.stats.evictions == 1
+
+
+def test_prefix_cache_match_and_insert_roundtrip():
+    pool = BlockPool(8, 4)
+    pc = PrefixCache(pool)
+    tokens = list(range(10))                    # 2 full blocks + partial
+    bids = [pool.alloc() for _ in range(3)]
+    pc.insert(tokens, bids)
+    assert pc.cached_blocks == 2                # only full blocks registered
+    assert pc.match(tokens) == bids[:2]
+    assert pc.match(tokens[:7]) == bids[:1]     # one full block covered
+    assert pc.match([9] + tokens[1:]) == []     # first block differs -> miss
+    # divergence after the first block stops the chain
+    assert pc.match(tokens[:4] + [99] * 6) == bids[:1]
+    # max_blocks caps the hit length
+    assert pc.match(tokens, max_blocks=1) == bids[:1]
+
+
+def test_prefix_cache_hash_collision_degrades_to_miss():
+    """Token identity is re-verified on every hit: a poisoned hash entry
+    (simulated collision) must read as a miss, never as a wrong prefix."""
+    pool = BlockPool(8, 4)
+    pc = PrefixCache(pool)
+    tokens = [1, 2, 3, 4]
+    bids = [pool.alloc()]
+    pc.insert(tokens, bids)
+    # graft the existing entry under the hash of *different* tokens
+    other = [5, 6, 7, 8]
+    pc._by_hash[chain_hash(None, tuple(other))] = \
+        pc._by_hash[chain_hash(None, tuple(tokens))]
+    assert pc.match(other) == []
+    assert pc.stats.collisions == 1
+
+
+def test_prefix_cache_forgets_evicted_blocks():
+    pool = BlockPool(2, 4)
+    pc = PrefixCache(pool)
+    tokens = [1, 2, 3, 4, 5, 6, 7, 8]
+    bids = [pool.alloc(), pool.alloc()]
+    pc.insert(tokens, bids)
+    for b in bids:
+        pool.ref_dec(b)                         # parked
+    assert pc.match(tokens) == bids
+    new = pool.alloc()                          # evicts bids[0] (LRU)
+    assert new == bids[0]
+    assert pc.match(tokens) == []               # chain broken at block 0
+    assert pc.cached_blocks == 1
+
+
+# ---------------------------------------------------------------------------
+# engine-level (jax; gpt2-smoke)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("gpt2-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    return cfg, model, params, rng
+
+
+def _paged(model, params, **kw):
+    from repro.serve import PagedServeEngine
+    kw.setdefault("n_slots", 3)
+    kw.setdefault("cache_len", 48)
+    kw.setdefault("block_size", 16)
+    return PagedServeEngine(model, params, **kw)
+
+
+def test_paged_engine_token_identical_to_ring_engine(setup):
+    """The acceptance bar: mixed-length prompts, more requests than slots
+    (staggered admission + slot reuse), greedy sampling — the paged engine's
+    tokens must equal the ring engine's exactly."""
+    from repro.serve import ServeEngine
+    cfg, model, params, rng = setup
+    lengths = [5, 9, 16, 3, 12, 7]
+    steps = [6, 4, 8, 5, 3, 7]
+    prompts = [rng.integers(0, cfg.vocab_size, (t,)).astype(np.int32)
+               for t in lengths]
+    ring = ServeEngine(model, params, n_slots=3, cache_len=48)
+    paged = _paged(model, params)
+    for p, s in zip(prompts, steps):
+        ring.submit(p, max_new_tokens=s)
+        paged.submit(p, max_new_tokens=s)
+    ref = ring.run()
+    got = paged.run()
+    assert set(got) == set(ref)
+    for rid in ref:
+        np.testing.assert_array_equal(got[rid], ref[rid], err_msg=f"rid={rid}")
+    assert paged.stats.steps < sum(steps)       # actually batched
+    assert paged.paged_stats.kv_detected_blocks == 0  # no false positives
+
+
+def test_paged_stochastic_sampling_matches_ring(setup):
+    """Per-request PRNG streams are position-keyed, not cache-layout-keyed:
+    stochastic sampling must agree between paged and ring engines."""
+    from repro.serve import SamplingParams, ServeEngine
+    cfg, model, params, rng = setup
+    prompt = rng.integers(0, cfg.vocab_size, (11,)).astype(np.int32)
+    sp = SamplingParams(temperature=1.3, top_k=17, seed=5)
+    ring = ServeEngine(model, params, n_slots=2, cache_len=48)
+    paged = _paged(model, params, n_slots=2)
+    r0 = ring.submit(prompt, max_new_tokens=7, sampling=sp)
+    r1 = paged.submit(prompt, max_new_tokens=7, sampling=sp)
+    np.testing.assert_array_equal(paged.run()[r1], ring.run()[r0])
+
+
+def test_prefix_cache_prefill_once_and_token_identity(setup):
+    """Two requests sharing a 2-block system prompt: the second admission
+    must hit the prefix cache (prefilling only its suffix) and still produce
+    exactly the tokens a cold engine produces."""
+    cfg, model, params, rng = setup
+    sys_prompt = rng.integers(0, cfg.vocab_size, (32,)).astype(np.int32)
+    tails = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+             for n in (5, 7)]
+    prompts = [np.concatenate([sys_prompt, t]) for t in tails]
+
+    eng = _paged(model, params, cache_len=64, num_blocks=16)
+    r0 = eng.submit(prompts[0], max_new_tokens=4)
+    eng.run()
+    r1 = eng.submit(prompts[1], max_new_tokens=4)  # prefix now resident
+    out1 = eng.run()[r1]
+    assert eng.pool.prefix.stats.hit_tokens >= 32
+
+    cold = _paged(model, params, cache_len=64, num_blocks=16)
+    rc = cold.submit(prompts[1], max_new_tokens=4)
+    np.testing.assert_array_equal(out1, cold.run()[rc])
+    assert cold.pool.prefix.stats.hit_tokens == 0
+
+
+def test_kv_bit_flip_detected_repaired_and_reported(setup):
+    """A resident-state SEU between decode steps: detected at the next
+    gather by the block checksums, repaired by re-prefilling only that
+    block, reported at telemetry site 6 — and the final tokens equal an
+    uncorrupted run's."""
+    cfg, model, params, rng = setup
+    prompt = rng.integers(0, cfg.vocab_size, (20,)).astype(np.int32)
+
+    clean = _paged(model, params, n_slots=2)
+    rc = clean.submit(prompt, max_new_tokens=8)
+    ref = clean.run()[rc]
+
+    eng = _paged(model, params, n_slots=2)
+    rid = eng.submit(prompt, max_new_tokens=8)
+    eng.step()
+    req = list(eng.scheduler.active_rows())[0]
+    eng.inject_kv_fault(layer=1, block=req.block_ids[0], head=0, row=3,
+                        col=5, bit=27, into="v")
+    out = eng.run()[rid]
+
+    np.testing.assert_array_equal(out, ref)
+    assert eng.paged_stats.kv_detected_blocks == 1
+    assert eng.paged_stats.kv_repaired_blocks == 1
+    st = eng.telemetry.requests[rid]
+    assert st.detected[5] == 1 and st.corrected[5] == 1
+    assert eng.telemetry.summary()["detected"] >= 1
+
+
+def test_kv_repair_survives_zero_retry_budget(setup):
+    """Regression: with ``max_retries=0`` the engine must still refuse to
+    commit an attempt that read poisoned KV — otherwise the corrupted tail
+    append refreshes the block checksums over bad data and the corruption
+    goes permanently silent. KV repair has its own >= 1 retry budget."""
+    cfg, model, params, rng = setup
+    prompt = rng.integers(0, cfg.vocab_size, (18,)).astype(np.int32)
+
+    clean = _paged(model, params, n_slots=2, max_retries=0)
+    rc = clean.submit(prompt, max_new_tokens=6)
+    ref = clean.run()[rc]
+
+    eng = _paged(model, params, n_slots=2, max_retries=0)
+    rid = eng.submit(prompt, max_new_tokens=6)
+    eng.step()
+    req = list(eng.scheduler.active_rows())[0]
+    eng.inject_kv_fault(layer=0, block=req.block_ids[1], head=1, row=1,
+                        col=2, bit=26, into="k")
+    out = eng.run()[rid]
+    np.testing.assert_array_equal(out, ref)
+    assert eng.paged_stats.kv_detected_blocks == 1
+    assert eng.paged_stats.kv_repaired_blocks == 1
+
+
+def test_persistent_kv_corruption_never_commits(setup):
+    """A block that stays corrupted through re-prefill (failing memory, not
+    a transient SEU — simulated by defeating the repair) must never have a
+    poisoned-gather attempt committed, and repeated poisoned steps must
+    escalate to a hard error instead of spinning."""
+    cfg, model, params, rng = setup
+    prompt = rng.integers(0, cfg.vocab_size, (10,)).astype(np.int32)
+    eng = _paged(model, params, n_slots=2)
+    rid = eng.submit(prompt, max_new_tokens=6)
+    eng.step()
+    req = list(eng.scheduler.active_rows())[0]
+    eng.inject_kv_fault(layer=0, block=req.block_ids[0], head=0, row=1,
+                        col=1, bit=28, into="k")
+    eng._repair_blocks = lambda *a, **k: None     # sticky: repair defeated
+    n_before = req.num_generated
+    eng.step()
+    assert req.num_generated == n_before          # nothing committed
+    assert eng.paged_stats.kv_detected_blocks == 1  # deduped across retries
+    assert eng.telemetry.requests[rid].detected[5] >= 1
+    with pytest.raises(RuntimeError, match="cordon"):
+        eng.run()
+
+
+def test_kv_campaign_no_silent_resident_corruption(setup):
+    """Randomized resident-KV campaign: every high-bit flip must be caught
+    at read time and healed without changing any request's tokens."""
+    from repro.core import run_kv_campaign
+    r = run_kv_campaign(n_trials=6, seed=3)
+    assert r.n_trials == 6
+    assert r.detected == 6, r.format_table()
+    assert r.repaired_blocks >= 6
+    assert r.mismatched_requests == 0, r.format_table()
+    assert r.telemetry_kv_detected == 6
+
+
+def test_pool_pressure_preempts_and_evicts_yet_stays_exact(setup):
+    """Decode growth outruns a deliberately tiny block pool: the engine must
+    preempt (freeing blocks), resume the victim later, and still match the
+    ring engine token-for-token."""
+    from repro.serve import ServeEngine
+    cfg, model, params, rng = setup
+    pa = rng.integers(0, cfg.vocab_size, (10,)).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab_size, (9,)).astype(np.int32)
+    eng = _paged(model, params, n_slots=2, cache_len=32, block_size=8,
+                 num_blocks=5)
+    ra = eng.submit(pa, max_new_tokens=12)
+    rb = eng.submit(pb, max_new_tokens=12)
+    outs = eng.run()
+    assert eng.paged_stats.preemptions >= 1
+
+    ring = ServeEngine(model, params, n_slots=2, cache_len=32)
+    r2a = ring.submit(pa, max_new_tokens=12)
+    r2b = ring.submit(pb, max_new_tokens=12)
+    ref = ring.run()
+    np.testing.assert_array_equal(outs[ra], ref[r2a])
+    np.testing.assert_array_equal(outs[rb], ref[r2b])
+
+
+def test_paged_admission_is_head_of_line_fcfs(setup):
+    """A queued request that cannot get its blocks must not be overtaken by
+    a smaller later request (the scheduler-fairness contract, exercised
+    through real block-pool pressure), and the freed prefix blocks of the
+    finished request are evicted to make room."""
+    cfg, model, params, rng = setup
+    eng = _paged(model, params, n_slots=2, cache_len=32, block_size=8,
+                 num_blocks=4)
+    pa = rng.integers(0, cfg.vocab_size, (20,)).astype(np.int32)  # 3 blocks
+    pb = rng.integers(0, cfg.vocab_size, (9,)).astype(np.int32)   # 2 blocks
+    pc = rng.integers(0, cfg.vocab_size, (3,)).astype(np.int32)   # 1 block
+    ra = eng.submit(pa, max_new_tokens=4)
+    eng.step()                                   # A admitted, holds 3 of 4
+    rb = eng.submit(pb, max_new_tokens=3)        # needs 2: must wait
+    rc = eng.submit(pc, max_new_tokens=3)        # needs 1: would fit NOW
+    outs = eng.run()
+    assert set(outs) == {ra, rb, rc}
+    orders = {r.rid: r.admit_order for r in eng.scheduler.finished}
+    assert orders[rb] < orders[rc], "small request jumped the FCFS queue"

@@ -169,6 +169,39 @@ def test_correct_mode_fault_corrected_in_kernel_no_retry(setup):
     assert eng.telemetry.requests[0].total_corrected > 0
 
 
+def test_failed_admission_keeps_fcfs_queue_position():
+    """Regression (scheduler fairness): a request that repeatedly fails
+    resource allocation — e.g. the paged engine cannot assemble its KV
+    blocks yet — must keep its FCFS queue position. A smaller request
+    behind it must never jump the queue."""
+    from repro.serve import ContinuousBatchingScheduler, Request
+
+    sched = ContinuousBatchingScheduler(2)
+    big = Request(rid=0, prompt=np.arange(10, dtype=np.int32),
+                  max_new_tokens=1)
+    small = Request(rid=1, prompt=np.arange(2, dtype=np.int32),
+                    max_new_tokens=1)
+    sched.add(big)
+    sched.add(small)
+    admitted = []
+    denies = {"left": 3}
+
+    def try_admit(req):
+        # resources exist for the small request throughout, but the head of
+        # the queue (big) is denied three times — FCFS requires head-of-line
+        # blocking, not queue-jumping
+        if req.rid == 0 and denies["left"]:
+            denies["left"] -= 1
+            return None
+        return len(admitted)
+
+    for _ in range(6):
+        admitted.extend(
+            r.rid for r in sched.step(try_admit, lambda r: None).admitted)
+    assert admitted == [0, 1]
+    assert denies["left"] == 0   # the denial path was actually exercised
+
+
 def test_per_request_telemetry_isolates_faulty_slot(setup):
     """A fault aimed at one slot must not pollute the other request's
     fault accounting."""

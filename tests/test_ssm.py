@@ -5,6 +5,9 @@ import numpy as np
 
 from repro.configs.base import SSMCfg
 from repro.models import ssm as S
+import pytest
+
+pytestmark = pytest.mark.quick
 
 
 def test_mamba_seq_vs_full():

@@ -14,6 +14,9 @@ from repro.models import build_model
 from repro.optim import AdamW
 from repro.serve import greedy_generate
 from repro.train import init_state, make_train_step
+import pytest
+
+pytestmark = pytest.mark.quick
 
 
 def test_train_checkpoint_crash_resume_serve(tmp_path):

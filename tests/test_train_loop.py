@@ -9,6 +9,9 @@ from repro.data import make_pipeline
 from repro.models import build_model
 from repro.optim import AdamW, warmup_cosine
 from repro.train import init_state, make_train_step
+import pytest
+
+pytestmark = pytest.mark.quick
 
 
 def run(steps=80, microbatches=1, seed=0):
