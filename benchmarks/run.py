@@ -14,6 +14,7 @@ from benchmarks import (bench_fig09_decoupled_vs_efta,
                         bench_fig14_snvr_distribution,
                         bench_tab12_unified_verification,
                         bench_fig15_model_overhead,
+                        bench_paged_attention,
                         bench_paged_cache,
                         bench_serve_throughput,
                         roofline)
@@ -29,6 +30,7 @@ ALL = {
     "fig15": bench_fig15_model_overhead.run,
     "serve": bench_serve_throughput.run,
     "paged": bench_paged_cache.run,
+    "paged_attn": bench_paged_attention.run,
     "roofline": roofline.run,
 }
 

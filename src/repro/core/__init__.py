@@ -4,11 +4,14 @@ from repro.core.checksum import (
     LOG_PROD_FLOOR,
     PAPER_STRIDE,
     TPU_STRIDE,
+    block_fold_bad,
     encode_cols,
     encode_kv,
+    encode_kv_tile,
     fold1,
     fold2,
     foldprod,
+    kv_block_threshold,
     verify_and_correct,
     verify_block,
     verify_product,

@@ -101,6 +101,7 @@ def run_kv_campaign(
     max_prompt: int = 24,
     gen: int = 8,
     bit_range: Tuple[int, int] = (24, 30),
+    kernel: str = "gather",
 ) -> KVCampaignResult:
     """Seeded SEU campaign against *resident* KV state (paper's gap: ALBERTA-
     style memory faults, not compute faults).
@@ -108,8 +109,13 @@ def run_kv_campaign(
     Drives one clean and one faulted :class:`repro.serve.PagedServeEngine`
     over the same request stream; each trial flips a random high bit of a
     random filled row of a random live block. The engine must detect the
-    corruption at the next gather, re-prefill only the poisoned block, retry
+    corruption at the next read, re-prefill only the poisoned block, retry
     the step, and finish with tokens identical to the clean run.
+
+    ``kernel`` selects the decode backend under test: ``"gather"`` verifies
+    at gather time outside the kernel; ``"fused"`` drives the SEUs through
+    the fused paged-attention kernel's in-loop verify (and the append-time
+    tail check), exercising the same detect→repair→token-identical contract.
     """
     # local imports: core.campaign is imported by repro.core's __init__, and
     # repro.serve imports repro.core — module-level imports would cycle
@@ -128,7 +134,8 @@ def run_kv_campaign(
 
     def fresh():
         eng = PagedServeEngine(model, params, n_slots=n_slots,
-                               cache_len=cache_len, block_size=block_size)
+                               cache_len=cache_len, block_size=block_size,
+                               kernel=kernel)
         for p in prompts:
             eng.submit(p, max_new_tokens=gen)
         return eng

@@ -98,6 +98,70 @@ def encode_cols(x: jax.Array, stride: int) -> Checksums:
                      fold2(xf, stride).astype(x.dtype))
 
 
+def encode_kv_tile(x: jax.Array, stride: int) -> Checksums:
+    """Block-granular :func:`encode_kv` for a single streamed (Bs, d) tile.
+
+    Mathematically identical to ``encode_kv`` (f32 accumulation over
+    ``g = Bs // stride`` segments, weights ``l + 1``) but built from static
+    strided slices and python-float weights so it lowers inside a Pallas
+    kernel body — ``encode_kv``'s ``jnp.arange`` weight vector would be a
+    captured constant, which ``pallas_call`` rejects. This is the fold the
+    fused paged-attention kernel recomputes in its KV streaming loop to
+    verify each resident block in the same pass that consumes it.
+    """
+    g = _check_fold(x.shape[-2], stride)
+    c1 = jnp.zeros(x.shape[:-2] + (stride, x.shape[-1]), jnp.float32)
+    c2 = jnp.zeros_like(c1)
+    for l in range(g):
+        seg = x[..., l * stride:(l + 1) * stride, :].astype(jnp.float32)
+        c1 = c1 + seg
+        c2 = c2 + float(l + 1) * seg
+    return Checksums(c1, c2)
+
+
+def kv_block_threshold(dtype) -> float:
+    """Default relative threshold for resident-KV block verification.
+
+    Shared between the engine's gather-time :func:`verify_block` and the
+    fused paged-attention kernel's in-loop verify so both backends flag
+    exactly the same corruptions: encode accumulates in f32 and rounds once
+    to the storage dtype, leaving ~2^-8 relative error in bf16 (vs ~2^-24
+    in f32), hence the two tiers.
+    """
+    return 1e-3 if jnp.dtype(dtype) == jnp.float32 else 5e-2
+
+
+def block_fold_bad(
+    fresh: Checksums,
+    stored: Checksums,
+    *,
+    threshold: float,
+) -> jax.Array:
+    """Compare a freshly recomputed fold pair against the resident pair.
+
+    ``fresh``/``stored``: (..., stride, d) checksum planes. Returns ``bad``
+    bool (...,) per block, reduced over the (stride, d) plane. The relative
+    threshold carries a per-block magnitude floor (mean |c|), same rationale
+    as :func:`verify_and_correct`: verify-side rounding scales with the fold
+    magnitude even where an individual checksum lands near zero. The negated
+    ``<=`` form makes NaN/inf deltas (exponent-bit corruption) count as
+    mismatches. This is the *single* definition of "block checksum mismatch":
+    the gather path folds full pools through it and the fused Pallas kernel
+    calls it on one streamed (stride, d) tile at a time.
+    """
+    c1 = stored.c1.astype(jnp.float32)
+    c2 = stored.c2.astype(jnp.float32)
+    floor1 = jnp.maximum(jnp.mean(jnp.abs(c1), axis=(-2, -1), keepdims=True),
+                         1e-6)
+    floor2 = jnp.maximum(jnp.mean(jnp.abs(c2), axis=(-2, -1), keepdims=True),
+                         1e-6)
+    ok1 = jnp.abs(c1 - fresh.c1.astype(jnp.float32)) \
+        <= threshold * jnp.maximum(jnp.abs(c1), floor1)
+    ok2 = jnp.abs(c2 - fresh.c2.astype(jnp.float32)) \
+        <= threshold * jnp.maximum(jnp.abs(c2), floor2)
+    return ~jnp.all(ok1 & ok2, axis=(-2, -1))
+
+
 def verify_block(
     x: jax.Array,
     checks: Checksums,
@@ -119,17 +183,7 @@ def verify_block(
     checksum plane, NaN-safe — and the total mismatch count).
     """
     fresh = encode_kv(x.astype(jnp.float32), stride)
-    c1 = checks.c1.astype(jnp.float32)
-    c2 = checks.c2.astype(jnp.float32)
-    # relative threshold with a per-block magnitude floor, same rationale as
-    # verify_and_correct: verify-side rounding scales with the fold magnitude
-    floor1 = jnp.maximum(jnp.mean(jnp.abs(c1), axis=(-2, -1), keepdims=True),
-                         1e-6)
-    floor2 = jnp.maximum(jnp.mean(jnp.abs(c2), axis=(-2, -1), keepdims=True),
-                         1e-6)
-    ok1 = jnp.abs(c1 - fresh.c1) <= threshold * jnp.maximum(jnp.abs(c1), floor1)
-    ok2 = jnp.abs(c2 - fresh.c2) <= threshold * jnp.maximum(jnp.abs(c2), floor2)
-    bad = ~jnp.all(ok1 & ok2, axis=(-2, -1))
+    bad = block_fold_bad(fresh, checks, threshold=threshold)
     return bad, bad.sum(dtype=jnp.int32)
 
 

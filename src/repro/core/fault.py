@@ -12,11 +12,13 @@ correct them. Sites mirror the paper's Cases:
   GEMM2    — after the P·V accumulate (ABFT on GEMM II, unified verification)
   WEIGHTS  — in model weights (memory fault; used by model-level benches)
   KV       — in resident paged KV-cache blocks (HBM memory fault between
-             decode steps; detected at read time by the block checksums of
-             ``repro.serve.paged`` and repaired by block re-prefill). For
-             this site the FaultSpec coordinates are reinterpreted as
-             (batch=layer, block=pool block id, head=kv head, row=in-block
-             offset, col=head-dim feature).
+             decode steps; detected at read time by the block checksums —
+             at gather time on the ``gather`` backend, inside the fused
+             paged-attention kernel's KV streaming loop on the ``fused``
+             backend — and repaired by block re-prefill). For this site the
+             FaultSpec coordinates are reinterpreted as (batch=layer,
+             block=pool block id, head=kv head, row=in-block offset,
+             col=head-dim feature).
 """
 from __future__ import annotations
 

@@ -70,6 +70,10 @@ class RequestFaultStats:
     that predate the paged cache report 5-vectors; the kv slot stays zero."""
 
     steps: int = 0
+    # ``kv`` is fed by whichever verification caught the flip: the gather
+    # backend's fold over gathered blocks, the fused kernel's in-loop verify
+    # (report-tile word 6), or the append-time tail check — all three share
+    # one fold/threshold definition in ``repro.core.checksum``.
     detected: list = dataclasses.field(
         default_factory=lambda: [0] * N_FAULT_SITES)
     corrected: list = dataclasses.field(

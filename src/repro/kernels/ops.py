@@ -67,16 +67,25 @@ def attention(
     raise ValueError(f"unknown attention impl {impl!r}; one of {IMPLS}")
 
 
-# --- paged KV-cache gather path --------------------------------------------
+# --- paged KV-cache paths --------------------------------------------------
 #
 # The paged serve engine stores KV in a global block pool
 # ``(num_layers, num_blocks, Hkv, block_size, head_dim)`` and addresses it
-# through per-request block tables. Attention itself is unchanged: the gather
-# materializes each request's table as the contiguous ``(.., Hkv, S, hd)``
-# layout every impl above already accepts (token position == table order), so
-# EFTA / flash / reference all serve paged caches for free. On TPU the gather
-# lowers to a dynamic-slice stream over HBM blocks — the same access pattern
-# a fused paged-attention kernel would issue from its inner loop.
+# through per-request block tables. Two decode backends consume it:
+#
+#   * gather (below): materialize each request's table as the contiguous
+#     ``(.., Hkv, S, hd)`` layout every impl above already accepts (token
+#     position == table order), so EFTA / flash / reference all serve paged
+#     caches for free — at the cost of an extra HBM round-trip per byte and
+#     a separate full-pool checksum pass. This is the portable baseline and
+#     the path prefill / chunked-extend / block-repair always use.
+#   * fused (``repro.kernels.efta_paged.efta_paged_attention_pallas``):
+#     decode-only Pallas kernel whose BlockSpec index maps read the block
+#     table directly (scalar prefetch), with the batch axis in the grid
+#     (native batched ragged decode) and the resident block-checksum verify
+#     folded into the KV streaming loop. Dispatched via
+#     ``PagedServeEngine(kernel="fused")`` through
+#     ``repro.models.attention.PagedKVCache``.
 
 
 def merge_block_axes(x: jax.Array) -> jax.Array:

@@ -67,6 +67,20 @@ def main():
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="paged pool size (0 = ring-equivalent capacity)")
+    ap.add_argument("--kernel", choices=("gather", "fused"), default="gather",
+                    help="paged decode backend: 'gather' materializes each "
+                         "table as a contiguous view and verifies checksums "
+                         "outside the kernel (portable baseline); 'fused' "
+                         "consumes block tables directly in the paged EFTA "
+                         "Pallas kernel with in-loop verification (interpret "
+                         "mode off-TPU)")
+    ap.add_argument("--kv-verify", choices=("always", "stamped"),
+                    default="always",
+                    help="gather-backend read-time verify policy: 'always' "
+                         "folds every table block each step; 'stamped' skips "
+                         "blocks untouched since their last verified read "
+                         "(amortized checksums; detection of a flip in a "
+                         "stamped block is deferred to its next write)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="tokens of system prompt shared by every request "
                          "(exercises the prefix cache)")
@@ -78,6 +92,10 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     log = get_logger("serve")
+    if not args.paged and (args.kernel != "gather"
+                           or args.kv_verify != "always"):
+        ap.error("--kernel/--kv-verify configure the paged engine; "
+                 "add --paged")
 
     cfg = get_config(args.arch)
     if args.ft_mode:
@@ -97,7 +115,8 @@ def main():
         eng = PagedServeEngine(model, params, n_slots=args.slots,
                                cache_len=args.cache_len or None,
                                block_size=args.block_size,
-                               num_blocks=args.num_blocks or None)
+                               num_blocks=args.num_blocks or None,
+                               kernel=args.kernel, kv_verify=args.kv_verify)
     else:
         eng = ServeEngine(model, params, n_slots=args.slots,
                           cache_len=args.cache_len or None)

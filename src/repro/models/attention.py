@@ -15,7 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import AttnCfg, FTCfg
+from repro.core import checksum as cks
 from repro.core.efta import EFTAConfig, FTReport
+from repro.kernels.efta_paged import efta_paged_attention_pallas
 from repro.kernels.ops import attention as attention_op
 from repro.models.layers import dense_init, matmul, rope
 
@@ -27,6 +29,29 @@ class KVCache(NamedTuple):
     # cross-attention memory (computed once at prefill; empty arrays if unused)
     ck: jax.Array
     cv: jax.Array
+
+
+class PagedKVCache(NamedTuple):
+    """One layer's view of the paged serve engine's checksummed block pool.
+
+    Passed in place of :class:`KVCache` to run decode natively batched over
+    ragged requests through the fused paged-attention kernel: K/V stay in the
+    shared pool and are consumed by block table, never gathered into a
+    contiguous view. ``bad`` is an *output* plane: per-(request, table-slot)
+    resident-checksum mismatches found this step (in-kernel for streamed
+    blocks, at append time for the tail block), which the engine's repair
+    path consumes. Stacked over layers for the transformer's block scan.
+    """
+
+    k: jax.Array     # (num_blocks+1, Hkv, block_size, hd); row 0 = null block
+    v: jax.Array
+    kc1: jax.Array   # (num_blocks+1, Hkv, check_stride, hd) resident encode_kv
+    kc2: jax.Array
+    vc1: jax.Array
+    vc2: jax.Array
+    bt: jax.Array    # (B, table_len) int32 per-request block tables (0-padded)
+    pos: jax.Array   # (B,) int32 tokens resident before this step
+    bad: jax.Array   # (B, table_len) int32 mismatch flags (in/out)
 
 
 def efta_cfg(ft: FTCfg) -> EFTAConfig:
@@ -56,6 +81,75 @@ def init_cache(batch: int, a: AttnCfg, *, cache_len: int, dtype,
         k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
         pos=jnp.zeros((), jnp.int32),
         ck=jnp.zeros(cshape, dtype), cv=jnp.zeros(cshape, dtype))
+
+
+def _paged_decode(q, k, v, cache: PagedKVCache, *, cfg: EFTAConfig, window,
+                  sm_scale, fault, interpret: bool):
+    """One natively batched ragged decode step against the paged block pool.
+
+    ``q``/``k``/``v``: this step's projected (+RoPE'd) (B, H|Hkv, 1, hd)
+    tensors. Appends the new K/V row into each request's tail block, then
+    dispatches the fused paged-attention kernel over the block tables —
+    append-before-attend, exactly mirroring the gather path's in-step
+    scatter, so the current token attends to itself.
+
+    Verification split: the kernel verifies every streamed block in its KV
+    loop, but the append below refreshes the *tail* block's checksums from
+    current content — doing that over a corrupted row would launder the
+    corruption into a consistent (permanently silent) state. So the tail
+    block is verified here against its pre-append checksums first, and its
+    flag joins the kernel's ``bad`` plane. ``fault`` is the fused kernel's
+    int32[8] descriptor (see ``repro.kernels.efta_paged``), not a FaultSpec.
+    """
+    bs = cache.k.shape[2]
+    cs = cache.kc1.shape[2]
+    thr = cks.kv_block_threshold(cache.k.dtype)
+    bt, pos = cache.bt, cache.pos
+    jtail = pos // bs                                          # (B,)
+    tgt = jnp.take_along_axis(bt, jtail[:, None], axis=1)[:, 0]
+    off = pos % bs
+
+    tail_k = cache.k[tgt]                                      # (B,Hkv,bs,hd)
+    tail_v = cache.v[tgt]
+    bad_tk, _ = cks.verify_block(
+        tail_k, cks.Checksums(cache.kc1[tgt], cache.kc2[tgt]), cs,
+        threshold=thr)
+    bad_tv, _ = cks.verify_block(
+        tail_v, cks.Checksums(cache.vc1[tgt], cache.vc2[tgt]), cs,
+        threshold=thr)
+    tail_bad = jnp.any(bad_tk | bad_tv, axis=-1) & (tgt > 0)   # (B,)
+
+    row_k = k[:, :, 0, :].astype(cache.k.dtype)
+    row_v = v[:, :, 0, :].astype(cache.v.dtype)
+    new_k = cache.k.at[tgt, :, off, :].set(row_k)
+    new_v = cache.v.at[tgt, :, off, :].set(row_v)
+    kc = cks.encode_kv(new_k[tgt], cs)
+    vc = cks.encode_kv(new_v[tgt], cs)
+    kc1 = cache.kc1.at[tgt].set(kc.c1)
+    kc2 = cache.kc2.at[tgt].set(kc.c2)
+    vc1 = cache.vc1.at[tgt].set(vc.c1)
+    vc2 = cache.vc2.at[tgt].set(vc.c2)
+
+    rep = efta_paged_attention_pallas(
+        q[:, :, 0, :], new_k, new_v,
+        cks.Checksums(kc1, kc2), cks.Checksums(vc1, vc2),
+        bt, pos + 1, cfg=cfg, check_threshold=thr, window=window,
+        sm_scale=sm_scale, fault=fault, interpret=interpret)
+
+    mb = bt.shape[1]
+    tail_plane = (jnp.arange(mb, dtype=jnp.int32)[None, :] == jtail[:, None]
+                  ) & tail_bad[:, None]
+    new_bad = jnp.maximum(cache.bad,
+                          jnp.maximum(rep.bad_blocks, tail_plane)
+                          .astype(jnp.int32))
+    det = rep.detected[:, :5]
+    report = FTReport(
+        detected=det,
+        corrected=det if cfg.mode == "correct" else det * 0,
+        max_delta=jnp.zeros((3,), jnp.float32))
+    new_cache = cache._replace(k=new_k, v=new_v, kc1=kc1, kc2=kc2,
+                               vc1=vc1, vc2=vc2, pos=pos + 1, bad=new_bad)
+    return rep.out[:, :, None, :], report, new_cache
 
 
 def _split_heads(x, n_heads, head_dim):
@@ -159,6 +253,19 @@ def attn_apply(
                  acfg.rope_theta).transpose(0, 2, 1, 3)
         k = rope(k.transpose(0, 2, 1, 3), positions,
                  acfg.rope_theta).transpose(0, 2, 1, 3)
+
+    if isinstance(cache, PagedKVCache):
+        # Fused paged backend: natively batched ragged decode straight off
+        # the block tables (``positions`` is (B, 1) here — per-request).
+        if mode != "decode" or s != 1:
+            raise NotImplementedError(
+                "PagedKVCache attention is single-token batched decode; "
+                "prefill/extend run through the contiguous gather path")
+        out, rep, new_cache = _paged_decode(
+            q, k, v, cache, cfg=cfg, window=window,
+            sm_scale=acfg.softmax_scale, fault=fault, interpret=interpret)
+        y = matmul(_merge_heads(out), params["wo"], ff_abft=ft.ff_abft)
+        return y, rep, new_cache
 
     new_cache = None
     if cache is None:

@@ -28,7 +28,8 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.core.efta import FTReport
 from repro.models import ssm as ssm_lib
-from repro.models.attention import KVCache, attn_apply, attn_init, init_cache
+from repro.models.attention import (KVCache, PagedKVCache, attn_apply,
+                                    attn_init, init_cache)
 from repro.models.layers import (embed_apply, embed_init, learned_pos_init,
                                  matmul, mlp_apply, mlp_init, norm_apply,
                                  norm_init, unembed)
@@ -296,7 +297,15 @@ def _scan_blocks(params_stack, x, *, cfg, flags_np, cache_stack, mode,
                    for k, v in flags_arrs.items()}
     xs = (params_stack, flags_stack, cache_stack) if have_cache else (
         params_stack, flags_stack)
-    (x, rep), ys = jax.lax.scan(body, (x, FTReport.zero()), xs,
+    rep0 = FTReport.zero()
+    if have_cache and isinstance(cache_stack, dict) and \
+            isinstance(cache_stack.get("attn"), PagedKVCache):
+        # paged decode reports per request: carry a (B, 5) report so the
+        # engine sees per-slot detections, as the vmapped path does
+        rep0 = FTReport(jnp.zeros((x.shape[0], 5), jnp.int32),
+                        jnp.zeros((x.shape[0], 5), jnp.int32),
+                        jnp.zeros((3,), jnp.float32))
+    (x, rep), ys = jax.lax.scan(body, (x, rep0), xs,
                                 unroll=True if not cfg.scan_layers else 1)
     aux = jnp.sum(ys[0])
     new_cache = ys[1] if have_cache else None
@@ -317,13 +326,17 @@ def forward(params, cfg: ModelConfig, batch: dict, *, mesh=None,
     x = embed_apply(params["embed"], tokens)
     if cache is not None and mode == "decode" and cfg.family != "ssm":
         pos0 = _cache_pos(cache)
-        positions = pos0 + jnp.arange(s, dtype=jnp.int32)
+        # paged caches decode natively batched over ragged requests: the
+        # position base is per-request (B,), making positions (B, S)
+        base = pos0[:, None] if pos0.ndim else pos0
+        positions = base + jnp.arange(s, dtype=jnp.int32)
     else:
         positions = jnp.arange(s, dtype=jnp.int32)
     if "pos" in params:
-        x = x + jnp.take(params["pos"]["pos"],
-                         jnp.minimum(positions, params["pos"]["pos"].shape[0] - 1),
-                         axis=0)[None, :, :].astype(x.dtype)
+        pe = jnp.take(params["pos"]["pos"],
+                      jnp.minimum(positions, params["pos"]["pos"].shape[0] - 1),
+                      axis=0).astype(x.dtype)
+        x = x + (pe if positions.ndim == 2 else pe[None, :, :])
     x = shard_act(x, mesh)
 
     memory = None
@@ -421,10 +434,16 @@ def forward(params, cfg: ModelConfig, batch: dict, *, mesh=None,
 
 
 def _cache_pos(cache) -> jax.Array:
-    """Extract the scalar position counter from a stacked cache pytree."""
+    """Extract the position counter from a stacked cache pytree: a scalar
+    for contiguous :class:`KVCache` rows, a per-request (B,) vector for the
+    paged block pool (every layer shares one table, so layer 0's row is
+    authoritative)."""
     def find(c):
+        if isinstance(c, PagedKVCache):
+            # stacked (L, B) -> (B,): per-request, stays a vector
+            return c.pos[0] if c.pos.ndim > 1 else c.pos
         if isinstance(c, KVCache):
-            return c.pos
+            return c.pos.reshape(-1)[0]
         if isinstance(c, dict):
             for v in c.values():
                 r = find(v)
@@ -442,4 +461,4 @@ def _cache_pos(cache) -> jax.Array:
     p = find(cache)
     if p is None:
         raise ValueError("cache has no position counter")
-    return p.reshape(-1)[0]
+    return p

@@ -43,6 +43,14 @@ class BlockMeta:
     ref: int = 0
     # set once the block is full and registered in the prefix cache
     chain_hash: Optional[int] = None
+    # generation stamps for read-time verification amortization: ``gen``
+    # moves on every engine write to the block's device data (scatter,
+    # append, COW copy, repair); ``verified_gen`` records the generation the
+    # block's checksums last verified clean at read time. A block whose
+    # stamps match was proven intact and untouched since — the stamped
+    # policy skips re-folding it.
+    gen: int = 0
+    verified_gen: int = -1
 
 
 @dataclasses.dataclass
@@ -132,6 +140,28 @@ class BlockPool:
         else:
             del self._meta[bid]
             self._free.append(bid)
+
+    # -- generation stamps (read-time verification amortization) ------------
+    def note_write(self, bid: int) -> None:
+        """Record that the engine rewrote this block's device data (and
+        refreshed its checksums): any read-time verification stamp is now
+        stale. Unknown/null ids are ignored."""
+        m = self._meta.get(bid)
+        if m is not None:
+            m.gen += 1
+
+    def mark_verified(self, bid: int) -> None:
+        """Stamp the block as read-time verified at its current generation
+        (call only after a decode attempt that folded it committed clean)."""
+        m = self._meta.get(bid)
+        if m is not None:
+            m.verified_gen = m.gen
+
+    def needs_verify(self, bid: int) -> bool:
+        """True unless the block verified clean at its current generation.
+        Freshly (re)allocated blocks always need a first verification."""
+        m = self._meta.get(bid)
+        return m is None or m.verified_gen != m.gen
 
     # -- sharing ------------------------------------------------------------
     def register(self, bid: int, chain_hash: int) -> None:

@@ -7,22 +7,34 @@ shared pool, identical prompt prefixes are stored once (hash-chain prefix
 cache + refcounted copy-on-write sharing in ``repro.serve.blocks``), and a
 preempted request frees exactly its blocks.
 
-The decode step gathers each slot's table into the contiguous layout the
-ring engine already decodes (``repro.kernels.ops.gather_block_kv``) — the
-same values at the same positions, so the paged engine is **token-identical**
-to the ring engine and to per-request sequential decoding.
+Decode has two backends (``kernel=``): ``"gather"`` materializes each slot's
+table into the contiguous layout the ring engine already decodes
+(``repro.kernels.ops.gather_block_kv``) and vmaps the pure-JAX EFTA path;
+``"fused"`` hands the block tables straight to the fused paged-attention
+Pallas kernel (``repro.kernels.efta_paged``, through
+``models.attention.PagedKVCache``) — natively batched ragged decode, no
+contiguous materialization, read-time verification folded into the kernel's
+KV streaming loop. Both compute the same values at the same positions, so
+the paged engine is **token-identical** to the ring engine and to
+per-request sequential decoding on either backend. Prefill, chunked extend
+and block repair always run through the gather path.
 
 Fault story (the paper's resident-state gap): EFTA protects the attention
 *computation*, but KV sitting in HBM across thousands of decode steps is
 unprotected memory — one SEU in a cached K row silently poisons every later
 token. Here every block carries an ABFT-style checksum pair
 (``repro.core.checksum.encode_kv`` along the token axis) written on append
-and **verified on every gather into the decode step**, so a resident bit
-flip is detected *at read time* (site ``kv`` in the telemetry 6-vector). The
-repair is surgical: only the poisoned block is re-prefilled — a chunked
-``Model.extend`` over that block's tokens against the verified preceding
-blocks — then the step retries; a repaired shared prefix block heals every
-request mapping it.
+and **verified at every read into a decode step** — on the gathered blocks
+outside the kernel (``gather``), or in the same kernel pass that streams the
+block (``fused``) — so a resident bit flip is detected *at read time* (site
+``kv`` in the telemetry 6-vector). The repair is surgical: only the
+poisoned block is re-prefilled — a chunked ``Model.extend`` over that
+block's tokens against the verified preceding blocks — then the step
+retries; a repaired shared prefix block heals every request mapping it.
+``kv_verify="stamped"`` amortizes the gather backend's checksum folds over
+per-block generation stamps (``serve.blocks``): steady-state decode folds
+~one tail block per slot instead of the whole table, trading deferred
+detection of flips that land in verified-and-untouched blocks.
 
 Prefix caching rides the same machinery: a prompt whose leading full blocks
 hash-chain-match resident blocks skips straight to ``Model.extend`` over its
@@ -40,9 +52,10 @@ import numpy as np
 
 from repro.core import checksum as cks
 from repro.core.fault import FaultSpec, flip_bit_at
+from repro.kernels.efta_paged import paged_fault_descriptor
 from repro.kernels.ops import gather_block_kv
 from repro.models.api import Model
-from repro.models.attention import KVCache
+from repro.models.attention import KVCache, PagedKVCache
 from repro.serve.blocks import NULL_BLOCK, BlockPool, PrefixCache
 from repro.serve.cache import add_unit_batch, drop_unit_batch
 from repro.serve.engine import ServeEngine
@@ -64,8 +77,10 @@ class PagedKVState(NamedTuple):
 
 @dataclasses.dataclass
 class PagedCacheStats:
-    kv_detected_blocks: int = 0    # block-checksum mismatches seen at gather
+    kv_detected_blocks: int = 0    # block-checksum mismatches seen at read
     kv_repaired_blocks: int = 0    # blocks healed by re-prefill
+    kv_verified_blocks: int = 0    # read-time fold verifications performed
+    kv_verify_skips: int = 0       # verifies skipped by generation stamps
     preemptions: int = 0
 
 
@@ -131,6 +146,14 @@ class PagedServeEngine(ServeEngine):
     defaults to ring-equivalent capacity (``n_slots * cache_len /
     block_size``); give it headroom to keep evicted prompts' prefix blocks
     resident for longer.
+
+    ``kernel``: ``"gather"`` (portable default) or ``"fused"`` (block-table
+    Pallas kernel; interpret mode off-TPU). ``kv_verify``: ``"always"``
+    (full read-time coverage, default) or ``"stamped"`` (generation-stamped
+    fold skipping on the gather backend; the fused kernel's in-loop verify
+    is already ~free). The fused backend reads its checksum threshold from
+    ``repro.core.checksum.kv_block_threshold`` — a custom
+    ``check_threshold`` only steers the gather-side verification.
     """
 
     def __init__(self, model: Model, params, *, n_slots: int = 8,
@@ -139,9 +162,16 @@ class PagedServeEngine(ServeEngine):
                  check_stride: Optional[int] = None,
                  check_threshold: Optional[float] = None,
                  max_retries: int = 2, retry_on_detect: bool = True,
-                 min_prefill_bucket: int = 8):
+                 min_prefill_bucket: int = 8, kernel: str = "gather",
+                 kv_verify: str = "always"):
         if block_size < 1:
             raise ValueError("block_size must be >= 1")
+        if kernel not in ("gather", "fused"):
+            raise ValueError(f"kernel must be 'gather' or 'fused'; "
+                             f"got {kernel!r}")
+        if kv_verify not in ("always", "stamped"):
+            raise ValueError(f"kv_verify must be 'always' or 'stamped'; "
+                             f"got {kv_verify!r}")
         cl = cache_len or model.cfg.max_seq
         cl = -(-cl // block_size) * block_size     # round up to block grid
         self.block_size = block_size
@@ -151,9 +181,10 @@ class PagedServeEngine(ServeEngine):
         if block_size % self.check_stride:
             raise ValueError("check_stride must divide block_size")
         if check_threshold is None:
-            check_threshold = (1e-3 if jnp.dtype(model.cfg.dtype)
-                               == jnp.float32 else 5e-2)
+            check_threshold = cks.kv_block_threshold(model.cfg.dtype)
         self.check_threshold = check_threshold
+        self.kernel = kernel
+        self.kv_verify = kv_verify
         super().__init__(model, params, n_slots=n_slots, cache_len=cl,
                          max_retries=max_retries,
                          retry_on_detect=retry_on_detect,
@@ -165,6 +196,17 @@ class PagedServeEngine(ServeEngine):
         self._admit_seq = 0
         # consecutive steps abandoned because corruption outlived repair
         self._poisoned_steps = 0
+        # read-time verification selector: "always" folds every table entry;
+        # "stamped" (gather backend only) folds just the entries whose block
+        # generation moved since their last verified read, padded to a small
+        # fixed width (full fallback when a step needs more — e.g. right
+        # after admission). The fused kernel verifies in-loop for free.
+        self._sel_all = np.broadcast_to(
+            np.arange(self.max_blocks, dtype=np.int32),
+            (n_slots, self.max_blocks)).copy()
+        self._sel_width = min(4, self.max_blocks)
+        if kernel == "fused":
+            self._decode = jax.jit(self._decode_fused_fn)
         self._gather_ctx = jax.jit(self._gather_ctx_fn)
         self._extend = jax.jit(self._extend_fn)
         self._scatter = jax.jit(self._scatter_fn)
@@ -178,35 +220,60 @@ class PagedServeEngine(ServeEngine):
 
     # -- jitted computations ------------------------------------------------
 
-    def _verify_gathered(self, state: PagedKVState, bt: jax.Array
+    def _verify_gathered(self, state: PagedKVState, bt: jax.Array,
+                         sel: Optional[jax.Array] = None
                          ) -> Tuple[Any, Any, jax.Array]:
-        """Gather K/V blocks for table ``bt`` (..., mb) and verify each block
-        against its resident checksums. Returns (k, v, bad): the contiguous
+        """Gather K/V blocks for table ``bt`` (..., mb) and verify blocks
+        against their resident checksums. Returns (k, v, bad): the contiguous
         KV views attention consumes, and ``bad`` (..., mb) flagging real
-        (non-null) blocks with a mismatch in either operand's checksum
-        pair."""
+        (non-null) blocks with a mismatch in either operand's checksum pair.
+
+        ``sel`` (ns, K) optionally restricts the fold recomputation to K
+        table entries per slot (-1 = none): the generation-stamped policy's
+        savings come from folding only the blocks whose content could have
+        moved since their last verified read, instead of the whole table.
+        """
         kraw, kg = gather_block_kv(state.k, bt)
         vraw, vg = gather_block_kv(state.v, bt)
         s = self.check_stride
         thr = self.check_threshold
+        if sel is None:
+            bad_k, _ = cks.verify_block(
+                kraw, cks.Checksums(state.kc1[:, bt], state.kc2[:, bt]), s,
+                threshold=thr)
+            bad_v, _ = cks.verify_block(
+                vraw, cks.Checksums(state.vc1[:, bt], state.vc2[:, bt]), s,
+                threshold=thr)
+            # reduce (L, ..., mb, Hkv) over layers and heads -> (..., mb)
+            bad = jnp.any(bad_k | bad_v, axis=(0, -1)) & (bt > NULL_BLOCK)
+            return kg, vg, bad
+        selc = jnp.clip(sel, 0, None)                       # (ns, K)
+        valid = sel >= 0
+        btv = jnp.take_along_axis(bt, selc, axis=1)         # (ns, K)
+        idx = selc[None, :, :, None, None, None]
+        ksel = jnp.take_along_axis(kraw, idx, axis=2)
+        vsel = jnp.take_along_axis(vraw, idx, axis=2)
         bad_k, _ = cks.verify_block(
-            kraw, cks.Checksums(state.kc1[:, bt], state.kc2[:, bt]), s,
+            ksel, cks.Checksums(state.kc1[:, btv], state.kc2[:, btv]), s,
             threshold=thr)
         bad_v, _ = cks.verify_block(
-            vraw, cks.Checksums(state.vc1[:, bt], state.vc2[:, bt]), s,
+            vsel, cks.Checksums(state.vc1[:, btv], state.vc2[:, btv]), s,
             threshold=thr)
-        # reduce (L, ..., mb, Hkv) over layers and heads -> (..., mb)
-        bad = jnp.any(bad_k | bad_v, axis=(0, -1)) & (bt > NULL_BLOCK)
-        return kg, vg, bad
+        bad_sel = (jnp.any(bad_k | bad_v, axis=(0, -1))
+                   & (btv > NULL_BLOCK) & valid)            # (ns, K)
+        ns = bt.shape[0]
+        bad = jnp.zeros(bt.shape, jnp.int32).at[
+            jnp.arange(ns)[:, None], selc].max(bad_sel.astype(jnp.int32))
+        return kg, vg, bad > 0
 
     def _decode_fn(self, params, tokens, state, bt, pos, faults, temps,
-                   topks, seeds, rids, counters):
+                   topks, seeds, rids, counters, verify_sel):
         """One batched paged decode step: gather-by-block-table, read-time
         checksum verify, vmapped EFTA decode, append + checksum update."""
         cfg = self.model.cfg
         a = cfg.attn
         L, ns, bs = cfg.num_layers, self.n_slots, self.block_size
-        kg, vg, bad = self._verify_gathered(state, bt)   # (L,ns,Hkv,mb*bs,hd)
+        kg, vg, bad = self._verify_gathered(state, bt, verify_sel)
         czero = jnp.zeros((L, ns, a.num_kv_heads, 1, a.head_dim), kg.dtype)
         cache = {"attn": KVCache(
             k=kg, v=vg, pos=jnp.broadcast_to(pos[None], (L, ns)),
@@ -241,6 +308,42 @@ class PagedServeEngine(ServeEngine):
             kc2=state.kc2.at[:, tgt].set(ck.c2),
             vc1=state.vc1.at[:, tgt].set(cv.c1),
             vc2=state.vc2.at[:, tgt].set(cv.c2))
+
+        def key_of(seed, rid, counter):
+            return jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(seed), rid), counter)
+
+        keys = jax.vmap(key_of)(seeds, rids, counters)
+        next_tokens = sample_tokens(logits, temperature=temps, top_k=topks,
+                                    keys=keys)
+        return next_tokens, rep, bad, new_state
+
+    def _decode_fused_fn(self, params, tokens, state, bt, pos, faults, temps,
+                         topks, seeds, rids, counters, verify_sel):
+        """One batched paged decode step on the fused backend: the model's
+        attention consumes the block pool *directly* through
+        :class:`repro.models.attention.PagedKVCache` — one natively batched
+        ragged kernel launch per layer, no contiguous gather, resident block
+        checksums verified inside the kernel's KV streaming loop (so
+        ``verify_sel`` is moot: in-loop verification is ~free). The fault
+        batch is translated to the kernel's single-SEU descriptor."""
+        del verify_sel
+        cfg = self.model.cfg
+        L = cfg.num_layers
+        grp = cfg.attn.num_heads // cfg.attn.num_kv_heads
+        desc = paged_fault_descriptor(faults, grp)
+        cache = {"attn": PagedKVCache(
+            k=state.k, v=state.v, kc1=state.kc1, kc2=state.kc2,
+            vc1=state.vc1, vc2=state.vc2,
+            bt=jnp.broadcast_to(bt[None], (L,) + bt.shape),
+            pos=jnp.broadcast_to(pos[None], (L,) + pos.shape),
+            bad=jnp.zeros((L, self.n_slots, self.max_blocks), jnp.int32))}
+        logits, rep, new_cache = self.model.decode_step(
+            params, tokens[:, None], cache, fault=desc)
+        nc = new_cache["attn"]
+        bad = jnp.any(nc.bad > 0, axis=0)                  # (ns, mb)
+        new_state = PagedKVState(k=nc.k, v=nc.v, kc1=nc.kc1, kc2=nc.kc2,
+                                 vc1=nc.vc1, vc2=nc.vc2)
 
         def key_of(seed, rid, counter):
             return jax.random.fold_in(
@@ -425,6 +528,8 @@ class PagedServeEngine(ServeEngine):
             self.pool.state = self._scatter(
                 self.pool.state, new_row, jnp.asarray(self._pad_bids(
                     req.block_ids)), jnp.int32(t_ctx))
+            for wb in req.block_ids:
+                self.pool.blocks.note_write(wb)
         else:
             ctx_bids = jnp.asarray(self._pad_bids(req.block_ids[:n_hit]))
             slen = t_ctx - t_hit
@@ -458,6 +563,8 @@ class PagedServeEngine(ServeEngine):
             self.pool.state = self._scatter(
                 self.pool.state, new_row, jnp.asarray(self._pad_bids(sc)),
                 jnp.int32(t_ctx))
+            for wb in req.block_ids[n_hit:]:
+                self.pool.blocks.note_write(wb)
 
         self.pool.prefix.insert(seq, req.block_ids)
         self.telemetry.observe_prefill(req.rid, det_acc, cor_acc,
@@ -548,8 +655,40 @@ class PagedServeEngine(ServeEngine):
                     if needs_copy:
                         self.pool.state = self._copy_block(
                             self.pool.state, jnp.int32(tail), jnp.int32(wb))
+                        self.pool.blocks.note_write(wb)
                     req.block_ids[bi] = wb
                     self._bt[slot, bi] = wb
+
+    # -- read-time verification policy --------------------------------------
+
+    def _verify_selector(self):
+        """Pick the table entries this decode attempt re-verifies.
+
+        Returns ``(sel, folds, skips)``: ``sel`` is None for full coverage
+        (the "always" policy, and the fused backend whose in-loop verify is
+        free), else an (n_slots, K) int32 selector (-1 = empty). Under the
+        generation-stamped policy only blocks written since their last
+        verified read need a fold — in steady-state decode that is one tail
+        block per slot instead of the whole table, which is where the
+        gather path's checksum overhead (the ~0.85x decode regression) goes.
+        A step needing more than K folds per slot (e.g. right after an
+        admission scattered a whole prompt) falls back to full coverage.
+        """
+        live = [r for r in self.scheduler.active_rows()
+                if r.slot is not None and not r.is_done()]
+        n_real = sum(len(r.block_ids) for r in live)
+        if self.kernel == "fused" or self.kv_verify == "always":
+            return None, n_real, 0
+        sel = np.full((self.n_slots, self._sel_width), -1, np.int32)
+        need_total = 0
+        for r in live:
+            need = [j for j, bid in enumerate(r.block_ids)
+                    if self.pool.blocks.needs_verify(bid)]
+            if len(need) > self._sel_width:
+                return self._sel_all, n_real, 0       # full-coverage fallback
+            sel[r.slot, :len(need)] = need
+            need_total += len(need)
+        return sel, need_total, n_real - need_total
 
     # -- read-time repair ---------------------------------------------------
 
@@ -587,6 +726,7 @@ class PagedServeEngine(ServeEngine):
             self.pool.state = self._scatter(
                 self.pool.state, new_row, jnp.asarray(sc, dtype=jnp.int32),
                 jnp.int32(start + n_fill))
+            self.pool.blocks.note_write(req.block_ids[j])
             self.paged_stats.kv_repaired_blocks += 1
 
     # -- stepping -----------------------------------------------------------
@@ -619,11 +759,15 @@ class PagedServeEngine(ServeEngine):
         cor_acc = np.zeros((self.n_slots, 5), np.int64)
         seen_bad: set = set()
         while True:
+            sel, folds, skips = self._verify_selector()
+            self.paged_stats.kv_verified_blocks += folds
+            self.paged_stats.kv_verify_skips += skips
             args = (jnp.asarray(self._pending), self.pool.state,
                     jnp.asarray(self._bt), jnp.asarray(self._pos),
                     attempt_faults, jnp.asarray(self._temps),
                     jnp.asarray(self._topks), jnp.asarray(self._seeds),
-                    jnp.asarray(self._rids), jnp.asarray(self._counters))
+                    jnp.asarray(self._rids), jnp.asarray(self._counters),
+                    None if sel is None else jnp.asarray(sel))
             next_tokens, rep, bad, new_state = self._decode(self.params, *args)
             det_acc += np.asarray(rep.detected, np.int64)
             cor_acc += np.asarray(rep.corrected, np.int64)
@@ -693,6 +837,16 @@ class PagedServeEngine(ServeEngine):
         # commit
         self._poisoned_steps = 0
         self.pool.state = new_state
+        if self.kernel == "gather" and self.kv_verify == "stamped":
+            # stamp what the committed attempt verified, BEFORE noting the
+            # tail appends below (a stamp covers the pre-write generation)
+            for req in active_reqs:
+                entries = (range(len(req.block_ids)) if sel is None
+                           or sel is self._sel_all
+                           else [int(j) for j in sel[req.slot] if j >= 0])
+                for j in entries:
+                    if j < len(req.block_ids):
+                        self.pool.blocks.mark_verified(req.block_ids[j])
         next_np = np.asarray(next_tokens)
         per_request = {}
         for req in active_reqs:
@@ -702,6 +856,11 @@ class PagedServeEngine(ServeEngine):
             req.retries += retries
             self._pending[slot] = tok
             self._counters[slot] += 1
+            # the decode appended one KV row into the tail block: its
+            # generation moves, so the stamp invalidates (re-verified next
+            # read under the stamped policy)
+            self.pool.blocks.note_write(
+                req.block_ids[int(self._pos[slot]) // self.block_size])
             self._pos[slot] += 1
             per_request[req.rid] = (
                 np.concatenate([det_acc[slot], kv_det[slot:slot + 1]]),

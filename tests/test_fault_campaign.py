@@ -57,3 +57,20 @@ def test_campaign_is_deterministic():
     b = run_campaign(mode="correct", n_trials=10, seed=3, bit_range=BITS)
     assert a.per_site == b.per_site
     assert np.isclose(a.worst_residual, b.worst_residual)
+
+
+def test_fused_kernel_kv_campaign_no_silent_resident_corruption():
+    """Site.KV SEU campaign through the *fused* paged-attention backend:
+    every randomized resident-KV high-bit flip must be caught by the
+    kernel's in-loop verify (or the append-time tail check), healed by
+    block re-prefill, and leave every request token-identical to the clean
+    run — the same zero-silent-corruption bar the gather backend holds."""
+    from repro.core import run_kv_campaign
+    r = run_kv_campaign(n_trials=4, seed=5, kernel="fused", n_requests=2,
+                        cache_len=48, gen=6)
+    assert r.n_trials == 4
+    assert r.detected == 4, r.format_table()
+    assert r.undetected == 0
+    assert r.repaired_blocks >= 4
+    assert r.mismatched_requests == 0, r.format_table()
+    assert r.telemetry_kv_detected == 4

@@ -1,0 +1,275 @@
+"""Parity + fault harness for the fused block-table EFTA paged-attention
+kernel (``repro.kernels.efta_paged``).
+
+The contract under test: for any block-table layout (permuted / fragmented),
+any ragged per-request length, and any GQA head ratio, the fused kernel is
+numerically interchangeable with the contiguous path —
+
+    fused(bt)  ==  EFTA(gather_block_kv(pool, bt))  ==  reference softmax
+
+with zero false-positive detections on clean pools; a resident pool bit flip
+is flagged at the exact (request, table-slot) it occupies by the in-loop
+verify (report-tile site 6, ``kv``); and in-compute SEUs at the five paper
+sites behave exactly as in the contiguous EFTA kernel (corrected in
+``correct`` mode, flagged in ``detect`` mode).
+"""
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from _propcheck import given, settings, st  # noqa: E402
+
+
+def _make_case(seed, *, B, mb, bs, hkv, grp, hd, cs, fragment=True,
+               stale_scale=1.0):
+    """Random pool + fragmented tables + ragged lengths. Pool rows past each
+    request's valid prefix hold *stale* data (recycled-block model) scaled by
+    ``stale_scale`` — the kernel must mask them out, not read zeros."""
+    import jax.numpy as jnp
+    from repro.core import checksum as cks
+
+    rng = np.random.default_rng(seed)
+    per_req = [int(rng.integers(1, mb * bs + 1)) for _ in range(B)]
+    n_real = sum(-(-t // bs) for t in per_req)
+    nb = n_real + 3                     # headroom: unmapped blocks stay stale
+    ids = np.arange(1, nb + 1)
+    if fragment:
+        rng.shuffle(ids)
+    bt = np.zeros((B, mb), np.int32)
+    used = 0
+    for i, t in enumerate(per_req):
+        n = -(-t // bs)
+        bt[i, :n] = ids[used:used + n]
+        used += n
+    pool_k = (rng.standard_normal((nb + 1, hkv, bs, hd)) * stale_scale
+              ).astype(np.float32)
+    pool_v = (rng.standard_normal((nb + 1, hkv, bs, hd)) * stale_scale
+              ).astype(np.float32)
+    if stale_scale != 1.0:
+        # valid prefixes at unit scale; only rows past kv_len stay loud
+        for i, t in enumerate(per_req):
+            for j in range(-(-t // bs)):
+                fill = min(bs, t - j * bs)
+                for p in (pool_k, pool_v):
+                    p[bt[i, j], :, :fill, :] = rng.standard_normal(
+                        (hkv, fill, hd)).astype(np.float32)
+    kc = cks.encode_kv(jnp.asarray(pool_k), cs)
+    vc = cks.encode_kv(jnp.asarray(pool_v), cs)
+    q = rng.standard_normal((B, hkv * grp, hd)).astype(np.float32)
+    return (jnp.asarray(q), jnp.asarray(pool_k), jnp.asarray(pool_v), kc, vc,
+            jnp.asarray(bt), jnp.asarray(per_req, jnp.int32))
+
+
+def _oracles(q, pool_k, pool_v, bt, kv_lens, *, cfg):
+    """Per-request contiguous oracles: gather + pure-JAX EFTA, and the naive
+    reference."""
+    import numpy as np
+    from repro.core.efta import efta_attention, reference_attention
+    from repro.kernels.ops import gather_block_kv
+
+    outs, refs = [], []
+    for i in range(q.shape[0]):
+        _, kg = gather_block_kv(pool_k[None], bt[i])
+        _, vg = gather_block_kv(pool_v[None], bt[i])
+        qi = q[i][None, :, None, :]
+        o, rep = efta_attention(qi, kg, vg, cfg=cfg, kv_len=int(kv_lens[i]))
+        assert int(np.sum(np.asarray(rep.detected))) == 0, \
+            "oracle EFTA false positive"
+        outs.append(np.asarray(o)[0, :, 0, :])
+        refs.append(np.asarray(reference_attention(
+            qi, kg, vg, kv_len=int(kv_lens[i])))[0, :, 0, :])
+    return np.stack(outs), np.stack(refs)
+
+
+@pytest.fixture(scope="module")
+def std_case():
+    """One standard shape (GQA 2:1, 3 fragmented tables, ragged lengths)
+    with its jitted kernel — compiled once, shared by the quick tests."""
+    import functools
+    import jax
+    from repro.core.efta import EFTAConfig
+    from repro.kernels.efta_paged import efta_paged_attention_pallas
+
+    B, mb, bs, hkv, grp, hd, cs = 3, 3, 16, 2, 2, 16, 8
+    cfg = EFTAConfig(mode="correct", stride=8, block_kv=bs)
+    case = _make_case(7, B=B, mb=mb, bs=bs, hkv=hkv, grp=grp, hd=hd, cs=cs)
+    fn = jax.jit(functools.partial(efta_paged_attention_pallas, cfg=cfg,
+                                   interpret=True))
+    fn_fault = jax.jit(lambda *a, fault: efta_paged_attention_pallas(
+        *a, cfg=cfg, fault=fault, interpret=True))
+    return case, cfg, fn, fn_fault
+
+
+@pytest.mark.quick
+def test_fused_matches_gather_efta_and_reference(std_case):
+    (q, pk, pv, kc, vc, bt, lens), cfg, fn, _ = std_case
+    rep = fn(q, pk, pv, kc, vc, bt, lens)
+    efta_out, ref_out = _oracles(q, pk, pv, bt, lens, cfg=cfg)
+    got = np.asarray(rep.out)
+    # same KV blocking + same f32 accumulation order as the pure-JAX scan
+    np.testing.assert_allclose(got, efta_out, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(got, ref_out, atol=1e-4, rtol=1e-4)
+    assert np.asarray(rep.detected).sum() == 0      # no false positives
+    assert not np.asarray(rep.bad_blocks).any()
+
+
+@pytest.mark.quick
+def test_resident_flip_flagged_at_exact_block(std_case):
+    """A pool SEU between steps: the in-loop verify must flag exactly the
+    (request, table-slot) holding the flipped block — nothing else — and
+    count it at report site 6 (kv)."""
+    import jax.numpy as jnp
+    from repro.core.fault import flip_bit_at
+
+    (q, pk, pv, kc, vc, bt, lens), cfg, fn, _ = std_case
+    rng = np.random.default_rng(3)
+    bt_np, lens_np = np.asarray(bt), np.asarray(lens)
+    hkv, bs, hd = pk.shape[1], pk.shape[2], pk.shape[3]
+    for trial in range(6):
+        b = int(rng.integers(0, q.shape[0]))
+        j = int(rng.integers(0, -(-int(lens_np[b]) // bs)))
+        fill = min(bs, int(lens_np[b]) - j * bs)
+        blk = int(bt_np[b, j])
+        flat = (((blk * hkv + int(rng.integers(0, hkv))) * bs
+                 + int(rng.integers(0, fill))) * hd
+                + int(rng.integers(0, hd)))
+        bit = int(rng.integers(24, 31))
+        into_k = bool(rng.integers(0, 2))
+        pkx = flip_bit_at(pk, jnp.int32(flat), jnp.int32(bit)) if into_k \
+            else pk
+        pvx = pv if into_k else flip_bit_at(pv, jnp.int32(flat),
+                                            jnp.int32(bit))
+        rep = fn(q, pkx, pvx, kc, vc, bt, lens)
+        bad = np.asarray(rep.bad_blocks)
+        det = np.asarray(rep.detected)
+        # the flipped block may be shared by no one else: exactly the slots
+        # of requests mapping it are flagged (here tables are disjoint)
+        assert bad[b, j], f"trial {trial}: flip not flagged"
+        assert bad.sum() == 1, f"trial {trial}: spurious flags {bad}"
+        assert det[b, 5] >= 1 and det[:, 5].sum() == det[b, 5]
+
+
+@pytest.mark.quick
+def test_checksum_corruption_is_also_detected(std_case):
+    """Site 6 covers the checksum words themselves: a flip in the resident
+    c1 plane mismatches the recomputed fold exactly like a data flip."""
+    import jax.numpy as jnp
+    from repro.core import checksum as cks
+    from repro.core.fault import flip_bit_at
+
+    (q, pk, pv, kc, vc, bt, lens), cfg, fn, _ = std_case
+    blk = int(np.asarray(bt)[1, 0])
+    hkv, cs, hd = kc.c1.shape[1], kc.c1.shape[2], kc.c1.shape[3]
+    flat = ((blk * hkv + 1) * cs + 2) * hd + 3
+    kc_bad = cks.Checksums(flip_bit_at(kc.c1, jnp.int32(flat),
+                                       jnp.int32(26)), kc.c2)
+    rep = fn(q, pk, pv, kc_bad, vc, bt, lens)
+    assert np.asarray(rep.bad_blocks)[1, 0]
+    assert np.asarray(rep.detected)[1, 5] >= 1
+
+
+@pytest.mark.quick
+def test_compute_site_seus_corrected_in_kernel(std_case):
+    """High-bit SEUs at the five EFTA sites, injected through the fused
+    kernel's descriptor: correct mode repairs in-kernel (output still matches
+    the oracle) and reports the site."""
+    import jax.numpy as jnp
+    from repro.core.fault import Site
+
+    (q, pk, pv, kc, vc, bt, lens), cfg, fn, fn_fault = std_case
+    efta_out, _ = _oracles(q, pk, pv, bt, lens, cfg=cfg)
+    sites = [Site.GEMM1, Site.EXP, Site.ROWMAX, Site.ROWSUM, Site.GEMM2]
+    for site in sites:
+        # [site, table_block, b, kv_head, group_row, col, bit, on]
+        desc = jnp.asarray([int(site), 0, 1, 1, 1, 3, 27, 1], jnp.int32)
+        rep = fn_fault(q, pk, pv, kc, vc, bt, lens, fault=desc)
+        err = np.max(np.abs(np.asarray(rep.out) - efta_out))
+        det = np.asarray(rep.detected)
+        assert err < 1e-3, f"{site.name}: residual {err:.2e}"
+        if site != Site.ROWMAX:   # rowmax may cancel analytically (Case 1)
+            assert det[1].sum() >= 1, f"{site.name}: no detection"
+        assert np.asarray(rep.bad_blocks).sum() == 0   # not a memory fault
+
+
+def test_detect_mode_flags_without_correcting():
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from repro.core.efta import EFTAConfig
+    from repro.core.fault import Site
+    from repro.kernels.efta_paged import efta_paged_attention_pallas
+
+    cfg = EFTAConfig(mode="detect", stride=8, block_kv=16)
+    case = _make_case(11, B=2, mb=2, bs=16, hkv=2, grp=2, hd=16, cs=8)
+    fn = jax.jit(functools.partial(efta_paged_attention_pallas, cfg=cfg,
+                                   interpret=True))
+    q, pk, pv, kc, vc, bt, lens = case
+    desc = jnp.asarray([int(Site.GEMM2), 0, 0, 0, 0, 2, 28, 1], jnp.int32)
+    rep = jax.jit(functools.partial(
+        efta_paged_attention_pallas, cfg=cfg, interpret=True))(
+        q, pk, pv, kc, vc, bt, lens, fault=desc)
+    assert np.asarray(rep.detected)[0].sum() >= 1
+    # clean pool, clean run: no detections in detect mode either
+    rep2 = fn(q, pk, pv, kc, vc, bt, lens)
+    assert np.asarray(rep2.detected).sum() == 0
+
+
+@given(st.integers(0, 10_000), st.sampled_from([8, 16]),
+       st.sampled_from([(1, 1), (2, 1), (2, 2), (1, 4)]),
+       st.booleans())
+@settings(max_examples=6, deadline=None)
+def test_parity_property_ragged_gqa_fragmented(seed, bs, heads, fragment):
+    """Property sweep: random ragged lengths, permuted/fragmented tables,
+    MHA/GQA/MQA ratios, two block sizes — fused == gather+EFTA == reference,
+    zero detections. Loud stale rows past every valid prefix prove the
+    ragged masking reads nothing it shouldn't."""
+    import functools
+    import jax
+    from repro.core.efta import EFTAConfig
+    from repro.kernels.efta_paged import efta_paged_attention_pallas
+
+    hkv, grp = heads
+    cfg = EFTAConfig(mode="correct", stride=8, block_kv=bs)
+    case = _make_case(seed, B=2, mb=3, bs=bs, hkv=hkv, grp=grp, hd=16,
+                      cs=min(8, bs), fragment=fragment, stale_scale=50.0)
+    q, pk, pv, kc, vc, bt, lens = case
+    rep = jax.jit(functools.partial(
+        efta_paged_attention_pallas, cfg=cfg, interpret=True))(
+        q, pk, pv, kc, vc, bt, lens)
+    efta_out, ref_out = _oracles(q, pk, pv, bt, lens, cfg=cfg)
+    got = np.asarray(rep.out)
+    np.testing.assert_allclose(got, efta_out, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(got, ref_out, atol=1e-4, rtol=1e-4)
+    assert np.asarray(rep.detected).sum() == 0
+    assert not np.asarray(rep.bad_blocks).any()
+
+
+def test_sliding_window_masks_like_the_contiguous_path():
+    """Per-request window masking (traced window scalar, as the per-layer
+    global/local selection passes it)."""
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from repro.core.efta import EFTAConfig, efta_attention
+    from repro.kernels.efta_paged import efta_paged_attention_pallas
+    from repro.kernels.ops import gather_block_kv
+
+    cfg = EFTAConfig(mode="correct", stride=8, block_kv=16)
+    q, pk, pv, kc, vc, bt, lens = _make_case(
+        5, B=2, mb=3, bs=16, hkv=2, grp=2, hd=16, cs=8)
+    win = 9
+    rep = jax.jit(functools.partial(
+        efta_paged_attention_pallas, cfg=cfg, interpret=True))(
+        q, pk, pv, kc, vc, bt, lens, window=jnp.int32(win))
+    for i in range(2):
+        _, kg = gather_block_kv(pk[None], bt[i])
+        _, vg = gather_block_kv(pv[None], bt[i])
+        o, _ = efta_attention(q[i][None, :, None, :], kg, vg, cfg=cfg,
+                              kv_len=int(lens[i]), window=win,
+                              causal=True, q_offset=int(lens[i]) - 1)
+        np.testing.assert_allclose(np.asarray(rep.out)[i],
+                                   np.asarray(o)[0, :, 0, :],
+                                   atol=2e-5, rtol=2e-5)
+    assert np.asarray(rep.detected).sum() == 0

@@ -315,6 +315,190 @@ def test_pool_pressure_preempts_and_evicts_yet_stays_exact(setup):
     np.testing.assert_array_equal(outs[rb], ref[r2b])
 
 
+def test_fused_backend_token_identical_to_ring_engine(setup):
+    """The fused-kernel acceptance bar: mixed-length prompts, more requests
+    than slots, staggered admission and slot reuse — the fused block-table
+    backend (no contiguous gather, natively batched ragged decode) must
+    produce exactly the ring engine's tokens."""
+    from repro.serve import ServeEngine
+    cfg, model, params, rng = setup
+    lengths = [5, 9, 16, 3, 12]
+    steps = [6, 4, 8, 5, 3]
+    prompts = [rng.integers(0, cfg.vocab_size, (t,)).astype(np.int32)
+               for t in lengths]
+    ring = ServeEngine(model, params, n_slots=3, cache_len=48)
+    fused = _paged(model, params, kernel="fused")
+    for p, s in zip(prompts, steps):
+        ring.submit(p, max_new_tokens=s)
+        fused.submit(p, max_new_tokens=s)
+    ref = ring.run()
+    got = fused.run()
+    assert set(got) == set(ref)
+    for rid in ref:
+        np.testing.assert_array_equal(got[rid], ref[rid], err_msg=f"rid={rid}")
+    assert fused.stats.steps < sum(steps)          # actually batched
+    assert fused.paged_stats.kv_detected_blocks == 0   # no false positives
+
+
+def test_fused_backend_exact_under_preemption_and_eviction(setup):
+    """Decode growth outruns a tiny block pool on the fused backend: COW
+    splits, preemption, resume-from-prefix — still token-identical to the
+    ring engine (the ISSUE's end-to-end serve bar)."""
+    from repro.serve import ServeEngine
+    cfg, model, params, rng = setup
+    pa = rng.integers(0, cfg.vocab_size, (10,)).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab_size, (9,)).astype(np.int32)
+    eng = _paged(model, params, n_slots=2, cache_len=32, block_size=8,
+                 num_blocks=5, kernel="fused")
+    ra = eng.submit(pa, max_new_tokens=12)
+    rb = eng.submit(pb, max_new_tokens=12)
+    outs = eng.run()
+    assert eng.paged_stats.preemptions >= 1
+
+    ring = ServeEngine(model, params, n_slots=2, cache_len=32)
+    r2a = ring.submit(pa, max_new_tokens=12)
+    r2b = ring.submit(pb, max_new_tokens=12)
+    ref = ring.run()
+    np.testing.assert_array_equal(outs[ra], ref[r2a])
+    np.testing.assert_array_equal(outs[rb], ref[r2b])
+
+
+def test_fused_backend_detects_and_repairs_kv_flip(setup):
+    """Resident SEU on the fused backend: the kernel's in-loop verify flags
+    the block in the same pass that streams it; the engine re-prefills only
+    that block, retries, and finishes token-identical."""
+    cfg, model, params, rng = setup
+    prompt = rng.integers(0, cfg.vocab_size, (20,)).astype(np.int32)
+    clean = _paged(model, params, n_slots=2, kernel="fused")
+    rc = clean.submit(prompt, max_new_tokens=8)
+    ref = clean.run()[rc]
+
+    eng = _paged(model, params, n_slots=2, kernel="fused")
+    rid = eng.submit(prompt, max_new_tokens=8)
+    eng.step()
+    req = list(eng.scheduler.active_rows())[0]
+    eng.inject_kv_fault(layer=1, block=req.block_ids[0], head=0, row=3,
+                        col=5, bit=27, into="v")
+    out = eng.run()[rid]
+    np.testing.assert_array_equal(out, ref)
+    assert eng.paged_stats.kv_detected_blocks == 1
+    assert eng.paged_stats.kv_repaired_blocks == 1
+    st = eng.telemetry.requests[rid]
+    assert st.detected[5] == 1 and st.corrected[5] == 1
+
+
+def test_fused_backend_corrects_in_compute_seu(setup):
+    """EFTA compute-site SEUs on the fused backend: the engine's per-slot
+    FaultSpec batch translates to the kernel's descriptor, the SEU is
+    corrected in-kernel (or retried), telemetry sees it, and the tokens
+    match a clean run."""
+    from repro.core import FaultSpec, Site
+    from repro.serve import batch_faults
+    cfg, model, params, rng = setup
+    prompt = rng.integers(0, cfg.vocab_size, (18,)).astype(np.int32)
+
+    clean = _paged(model, params, n_slots=2, kernel="fused")
+    rc = clean.submit(prompt, max_new_tokens=6)
+    ref = clean.run()[rc]
+
+    eng = _paged(model, params, n_slots=2, kernel="fused")
+    rid = eng.submit(prompt, max_new_tokens=6)
+    spec = FaultSpec.single(Site.GEMM2, block=0, head=1, row=0, col=3,
+                            bit=27)
+    faults = {2: batch_faults(2, {0: spec}),
+              4: batch_faults(2, {0: FaultSpec.single(
+                  Site.GEMM1, block=1, head=2, row=0, col=5, bit=26)})}
+    out = eng.run(faults_by_step=faults)[rid]
+    np.testing.assert_array_equal(out, ref)
+    st = eng.telemetry.requests[rid]
+    assert sum(st.detected[:5]) >= 1
+    assert st.detected[5] == 0          # compute faults, not memory faults
+
+
+def test_stamped_verification_skips_untouched_blocks_and_stays_exact(setup):
+    """Generation-stamped read-time verification (gather backend): blocks
+    untouched since their last verified read skip the checksum fold; stamps
+    invalidate on write (the tail append) and on repair; the clean-run
+    tokens are identical to the always-verify engine's."""
+    cfg, model, params, rng = setup
+    lengths = [5, 9, 16, 3]
+    steps = [6, 4, 8, 5]
+    prompts = [rng.integers(0, cfg.vocab_size, (t,)).astype(np.int32)
+               for t in lengths]
+    always = _paged(model, params)
+    stamped = _paged(model, params, kv_verify="stamped")
+    for p, s in zip(prompts, steps):
+        always.submit(p, max_new_tokens=s)
+        stamped.submit(p, max_new_tokens=s)
+    ref = always.run()
+    got = stamped.run()
+    for rid in ref:
+        np.testing.assert_array_equal(got[rid], ref[rid], err_msg=f"rid={rid}")
+    # the whole point: strictly fewer checksum folds, none skipped under
+    # the always policy
+    assert stamped.paged_stats.kv_verify_skips > 0
+    assert always.paged_stats.kv_verify_skips == 0
+    assert stamped.paged_stats.kv_verified_blocks < \
+        always.paged_stats.kv_verified_blocks
+
+
+def test_stamps_invalidate_on_write_and_on_repair(setup):
+    """The regression contract: a committed verify stamps the blocks it
+    folded; the decode append invalidates the tail's stamp; a detected
+    corruption's repair rewrites the block and invalidates again (so the
+    next read re-verifies the healed content)."""
+    cfg, model, params, rng = setup
+    prompt = rng.integers(0, cfg.vocab_size, (20,)).astype(np.int32)
+    clean = _paged(model, params, n_slots=2, kv_verify="stamped")
+    rc = clean.submit(prompt, max_new_tokens=8)
+    ref = clean.run()[rc]
+
+    eng = _paged(model, params, n_slots=2, kv_verify="stamped")
+    rid = eng.submit(prompt, max_new_tokens=8)
+    eng.step()
+    req = list(eng.scheduler.active_rows())[0]
+    blocks = eng.pool.blocks
+    tail_j = int(eng._pos[req.slot]) // eng.block_size
+    # after the committed step: non-tail blocks are stamped verified, the
+    # tail was appended to (write -> stamp invalid)
+    assert not blocks.needs_verify(req.block_ids[0])
+    assert blocks.needs_verify(req.block_ids[tail_j])
+
+    # corrupt the TAIL block (stamped-invalid, so still re-verified): must
+    # be detected, repaired, and the repair must invalidate the stamp again
+    eng.inject_kv_fault(layer=0, block=req.block_ids[tail_j], head=1,
+                        row=1, col=2, bit=27, into="k")
+    eng.step()
+    assert eng.paged_stats.kv_detected_blocks == 1
+    assert eng.paged_stats.kv_repaired_blocks >= 1
+    out = eng.run()[rid]
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_stamped_policy_defers_detection_of_stamped_blocks(setup):
+    """The documented coverage tradeoff, pinned: under the stamped policy a
+    flip landing in a verified-and-untouched block is *not* re-folded (the
+    skip is the throughput win); the always policy catches the identical
+    flip immediately. Anyone weakening the default `always` policy must
+    confront this test."""
+    cfg, model, params, rng = setup
+    prompt = rng.integers(0, cfg.vocab_size, (20,)).astype(np.int32)
+
+    def poisoned(**kw):
+        eng = _paged(model, params, n_slots=2, **kw)
+        eng.submit(prompt, max_new_tokens=4)
+        eng.step()
+        req = list(eng.scheduler.active_rows())[0]
+        # block 0 is non-tail here (pos = 20 > block_size): stamped-verified
+        eng.inject_kv_fault(layer=0, block=req.block_ids[0], head=0,
+                            row=2, col=3, bit=27, into="k")
+        eng.step()
+        return eng.paged_stats.kv_detected_blocks
+
+    assert poisoned() == 1                           # always: caught
+    assert poisoned(kv_verify="stamped") == 0        # stamped: deferred
+
+
 def test_paged_admission_is_head_of_line_fcfs(setup):
     """A queued request that cannot get its blocks must not be overtaken by
     a smaller later request (the scheduler-fairness contract, exercised
