@@ -20,11 +20,21 @@ gather path moves every KV byte ~3x per step: pool read, contiguous write,
 attention read; the fused path streams each block once). On TPU
 (``interpret=False``) the wall-clock and the model should agree.
 
+``--prefill`` switches to a prefill-heavy workload (long prompts, short
+generations) that exercises the unified multi-token step: the fused backend
+prefills through mixed chunked batches of ONE compiled program, the gather
+backend through its fixed-width extend chunks — against the one-program-per-
+prompt-bucket scheme this replaced. Reports time-to-drain throughput and
+the per-backend compiled-program count.
+
   PYTHONPATH=src python -m benchmarks.bench_paged_attention
   PYTHONPATH=src python -m benchmarks.bench_paged_attention --smoke
+  PYTHONPATH=src python -m benchmarks.bench_paged_attention --prefill --smoke
 
-``--smoke`` runs a tiny configuration and asserts all three backends are
-token-identical — the CI guard that fails fast on kernel-dispatch breakage.
+``--smoke`` runs a tiny configuration and asserts all backends are
+token-identical (and, under ``--prefill``, that the unified engine compiled
+at most two step programs) — the CI guard that fails fast on
+kernel-dispatch or chunked-prefill breakage.
 """
 from __future__ import annotations
 
@@ -67,6 +77,75 @@ def _traffic_model(cfg, *, n_blocks_live, n_slots_live, block_size,
         # each block streamed once, checksums ride the same loop
         "fused": kv + cks,
     }
+
+
+def _compiled_programs(eng) -> int:
+    """Compiled step-program count of an engine's hot path (best effort)."""
+    fn = getattr(eng, "_step_fused", None) if eng.kernel == "fused" \
+        else getattr(eng, "_extend", None)
+    try:
+        return int(fn._cache_size())
+    except (AttributeError, TypeError):
+        return -1
+
+
+def run_prefill(smoke: bool = False) -> None:
+    """Prefill-heavy comparison: unified chunked step vs gather chunks."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("gpt2-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    n_slots, cache_len, bs, chunk = (2, 64, 16, 16) if smoke \
+        else (4, 128, 16, 32)
+    n_req, gen = (3, 2) if smoke else (8, 2)
+    # long ragged prompts spanning several chunks AND straddling block
+    # edges; the warmup round uses *different* prompts of the same lengths
+    # so its jit compiles carry over but its prefix-cache entries cannot —
+    # the timed round must actually prefill, not replay cache hits
+    lengths = [int(rng.integers(cache_len // 2, cache_len - gen))
+               for _ in range(n_req)]
+    warm_prompts = [rng.integers(0, cfg.vocab_size, (t,)).astype(np.int32)
+                    for t in lengths]
+    prompts = [rng.integers(0, cfg.vocab_size, (t,)).astype(np.int32)
+               for t in lengths]
+
+    backends = {
+        "gather/chunked": dict(),
+        "fused/unified": dict(kernel="fused"),
+    }
+    results, token_streams, engines = {}, {}, {}
+    for name, kw in backends.items():
+        eng = _engine(model, params, n_slots=n_slots, cache_len=cache_len,
+                      block_size=bs, chunk_size=chunk, **kw)
+        _drive(eng, warm_prompts, gen)     # warmup: compiles
+        dt, outs = _drive(eng, prompts, gen)
+        prompt_tokens = sum(len(p) for p in prompts)
+        results[name] = (prompt_tokens / dt, eng.paged_stats)
+        token_streams[name] = [list(outs[r]) for r in sorted(outs)]
+        engines[name] = eng
+
+    ref = token_streams["gather/chunked"]
+    for name, got in token_streams.items():
+        assert got == ref, f"{name} diverged from gather/chunked: " \
+                           f"{got} != {ref}"
+    fused_programs = _compiled_programs(engines["fused/unified"])
+    print(f"chunked prefill ({'smoke' if smoke else 'full'}; {n_req} ragged "
+          f"prompts x {gen} gen tokens, chunk={chunk}, bs={bs}):")
+    for name, (tps, st) in results.items():
+        print(f"  {name:15s} {tps:9.1f} prompt tok/s   "
+              f"mixed-batch prefill tokens={st.chunked_prefill_tokens}")
+    print(f"  fused unified-step programs compiled: {fused_programs} "
+          f"(<= 2: chunk width + decode width; was one per prompt bucket)")
+    if smoke:
+        assert fused_programs in (-1, 1, 2), \
+            f"unified engine compiled {fused_programs} step programs"
+        assert engines["fused/unified"].paged_stats.chunked_prefill_tokens > 0
+        print("SMOKE OK: chunked prefill token-identical across backends")
 
 
 def run(smoke: bool = False) -> None:
@@ -134,4 +213,7 @@ def run(smoke: bool = False) -> None:
 
 
 if __name__ == "__main__":
-    run(smoke="--smoke" in sys.argv[1:])
+    if "--prefill" in sys.argv[1:]:
+        run_prefill(smoke="--smoke" in sys.argv[1:])
+    else:
+        run(smoke="--smoke" in sys.argv[1:])

@@ -102,6 +102,8 @@ def run_kv_campaign(
     gen: int = 8,
     bit_range: Tuple[int, int] = (24, 30),
     kernel: str = "gather",
+    chunk_size: Optional[int] = None,
+    chunk_budget: Optional[int] = None,
 ) -> KVCampaignResult:
     """Seeded SEU campaign against *resident* KV state (paper's gap: ALBERTA-
     style memory faults, not compute faults).
@@ -116,6 +118,10 @@ def run_kv_campaign(
     at gather time outside the kernel; ``"fused"`` drives the SEUs through
     the fused paged-attention kernel's in-loop verify (and the append-time
     tail check), exercising the same detect→repair→token-identical contract.
+    ``chunk_size``/``chunk_budget`` configure the unified chunked step —
+    a ``chunk_size`` below ``max_prompt`` forces prompts to prefill across
+    several mixed batches, so resident SEUs strike mid-prefill state and the
+    detect→repair path is exercised through the chunked kernel too.
     """
     # local imports: core.campaign is imported by repro.core's __init__, and
     # repro.serve imports repro.core — module-level imports would cycle
@@ -135,7 +141,8 @@ def run_kv_campaign(
     def fresh():
         eng = PagedServeEngine(model, params, n_slots=n_slots,
                                cache_len=cache_len, block_size=block_size,
-                               kernel=kernel)
+                               kernel=kernel, chunk_size=chunk_size,
+                               chunk_budget=chunk_budget)
         for p in prompts:
             eng.submit(p, max_new_tokens=gen)
         return eng

@@ -1,4 +1,4 @@
-"""Fused block-table EFTA paged-attention kernel (decode path).
+"""Fused block-table EFTA paged-attention kernel (unified multi-token path).
 
 The paged serve engine's PR-2 decode gathered each request's block table into
 a contiguous KV view *outside* the kernel, then vmapped the pure-JAX EFTA
@@ -21,22 +21,40 @@ separate full-pool checksum pass. This kernel removes both:
     ``bad`` plane the engine's repair path consumes. A resident HBM bit flip
     therefore costs zero extra memory traffic to detect.
 
-GQA is handled by folding the query-head group into the GEMM rows: the score
-tile for one (request, kv-head) step is ``(group, block_size)``, so MQA/GQA
-ratios change tile shapes, not code paths. The EFTA scheme itself (tensor-
-checksum ABFT on GEMM I, checksum-reuse EXP verify, shadow rowmax, SNVR +
-shadow rowsum, unified output verification — paper Algorithm 1) is inherited
-unchanged from ``repro.kernels.efta_attention``; this kernel reuses its fold
-and correction helpers so the two stay in lockstep.
+Since PR 4 the q block is **multi-token**: each request brings a chunk of up
+to ``C`` query rows (``q`` of shape ``(B, H, C, D)``) with a per-request
+valid-row count ``q_lens``, so *one* compiled program covers single-token
+decode (``C = 1`` or ``q_len = 1``), chunked prefill, prefix-extend, and
+block repair — the unified end-to-end protected kernel the paper argues for,
+replacing the per-bucket prefill programs of the gather path. Chunk row
+``c`` sits at absolute position ``kv_len - q_len + c``; masking is causal
+within the chunk, sliding-window, and ragged per request, all per *row*.
+Rows past ``q_len`` are padding: fully masked, they emit zero output and
+cannot trip any verification (every check compares self-consistent computed
+values). A chunk may straddle block edges; the KV rows the chunk itself
+appends are scattered (and their block checksums regenerated) by the caller
+*before* the launch (``repro.models.attention._paged_chunk``), so the
+streaming verify covers the chunk's own blocks too.
+
+GQA is handled by folding the query-head group — and now the chunk axis —
+into the GEMM rows: the score tile for one (request, kv-head) step is
+``(group * C, block_size)``, so MQA/GQA ratios and chunk widths change tile
+shapes, not code paths. The EFTA scheme itself (tensor-checksum ABFT on
+GEMM I, checksum-reuse EXP verify, shadow rowmax, SNVR + shadow rowsum,
+unified output verification — paper Algorithm 1) is inherited unchanged from
+``repro.kernels.efta_attention``; this kernel reuses its fold and correction
+helpers so the two stay in lockstep.
 
 Fault descriptor (int32[8]): [site, table_block j, batch b, kv-head h,
-group-row, col, bit, enabled] — one SEU per step, matching the paper's
-single-event model. ``Site.KV`` faults are *not* injected here: they strike
-the resident pool between steps (``PagedServeEngine.inject_kv_fault``) and
-this kernel's job is to catch them.
+tile-row (group_row * C + chunk_row), col, bit, enabled] — one SEU per step,
+matching the paper's single-event model. ``Site.KV`` faults are *not*
+injected here: they strike the resident pool between steps
+(``PagedServeEngine.inject_kv_fault``) and this kernel's job is to catch
+them.
 
 Validated in interpret mode on CPU; lowers for TPU via Mosaic (on real TPUs
-pick ``head_dim``/``block_size`` multiples of the (8, 128) f32 tile).
+pick ``head_dim``/``block_size`` multiples of the (8, 128) f32 tile and a
+``group * C`` row count that is a multiple of 8).
 """
 from __future__ import annotations
 
@@ -55,7 +73,7 @@ from repro.kernels.efta_attention import (_CompilerParams, _correct_strided,
                                           _flip, _fold_prod, _fold_slices)
 
 # fault descriptor layout (int32[8]):
-# [site, table_block, batch, kv_head, group_row, col, bit, enabled]
+# [site, table_block, batch, kv_head, tile_row, col, bit, enabled]
 P_SITE, P_BLOCK, P_B, P_H, P_ROW, P_COL, P_BIT, P_ON = range(8)
 
 NO_WINDOW = 1 << 30     # "global attention" sentinel for the window scalar
@@ -64,7 +82,7 @@ NO_WINDOW = 1 << 30     # "global attention" sentinel for the window scalar
 class PagedReport(NamedTuple):
     """Per-request outcome of one fused paged-attention call."""
 
-    out: jax.Array        # (B, H, head_dim) attention output
+    out: jax.Array        # (B, H, head_dim) or (B, H, C, head_dim) output
     detected: jax.Array   # (B, 6) int32 — [gemm1, exp, rowmax, rowsum,
     #                       gemm2, kv] per request, summed over kv heads
     bad_blocks: jax.Array  # (B, table_len) bool — resident-checksum
@@ -81,7 +99,7 @@ def _hit(fault_ref, site, *, b, h, j):
 
 def _paged_kernel(
     # scalar prefetch
-    fault_ref, bt_ref, kvlen_ref, win_ref,
+    fault_ref, bt_ref, kvlen_ref, qlen_ref, win_ref,
     # inputs
     q_ref, k_ref, v_ref, kc1_ref, kc2_ref, vc1_ref, vc2_ref,
     # outputs
@@ -93,6 +111,7 @@ def _paged_kernel(
     sm_scale: float,
     block_size: int,
     n_blocks: int,
+    chunk: int,
     s_kv: int,
     s_out: int,
     kv_thr: float,
@@ -112,9 +131,10 @@ def _paged_kernel(
     bs = block_size
     g_kv = bs // s_kv
 
-    kv_len = kvlen_ref[b]               # valid tokens incl. current (traced)
+    kv_len = kvlen_ref[b]       # valid tokens incl. the chunk's rows (traced)
+    q_len = qlen_ref[b]         # valid chunk rows for this request (traced)
     window = win_ref[0]
-    q_pos = kv_len - 1                  # the decode token's position
+    base = kv_len - q_len       # absolute position of chunk row 0
 
     @pl.when(j == 0)
     def _init():
@@ -130,16 +150,17 @@ def _paged_kernel(
         vmax_scr[0] = 0.0
         bad_ref[...] = jnp.zeros_like(bad_ref)
 
-    # Ragged skip: blocks entirely past this request's valid prefix (or
-    # entirely outside its sliding window) contribute nothing — no MXU work,
-    # no checksum folds. Null-padded table entries point at pool row 0 and
-    # always land here or under the verify's ``real`` gate.
+    # Ragged / causal skip: blocks entirely past every chunk row's valid
+    # prefix (or entirely outside every row's sliding window — the earliest
+    # row ``base`` has the lowest window floor) contribute nothing — no MXU
+    # work, no checksum folds. Null-padded table entries point at pool row 0
+    # and always land here or under the verify's ``real`` gate.
     kv_start = j * bs
-    run = (kv_start < kv_len) & (q_pos - (kv_start + bs - 1) < window)
+    run = (kv_start < kv_len) & (base - (kv_start + bs - 1) < window)
 
     @pl.when(run)
     def _body():
-        q = q_ref[...]                  # (grp, D)
+        q = q_ref[...]                  # (grp * C, D), rows group-major
         k = k_ref[...]                  # (bs, D)
         v = v_ref[...]                  # (bs, D)
         real = bt_ref[b, j] > 0
@@ -170,7 +191,7 @@ def _paged_kernel(
         # ---- GEMM I on the MXU (f32 accumulate) + tensor-checksum ABFT ----
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * sm_scale      # (grp, bs)
+            preferred_element_type=jnp.float32) * sm_scale  # (grp * C, bs)
         s = _flip(s, on=_hit(fault_ref, Site.GEMM1, b=b, h=h, j=j),
                   row=fault_ref[P_ROW], col=fault_ref[P_COL],
                   bit=fault_ref[P_BIT])
@@ -185,10 +206,11 @@ def _paged_kernel(
             kc1, kc2 = cks.encode_kv_tile(k, s_kv)
             sc1 = jax.lax.dot_general(
                 q.astype(jnp.float32), kc1, (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32) * sm_scale  # (grp, s_kv)
+                preferred_element_type=jnp.float32) * sm_scale
             sc2 = jax.lax.dot_general(
                 q.astype(jnp.float32), kc2, (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32) * sm_scale
+                preferred_element_type=jnp.float32)
+            sc2 = sc2 * sm_scale
             sum1 = _fold_slices(s, s_kv, weighted=False)
             sum2 = _fold_slices(s, s_kv, weighted=True)
             d1 = sc1 - sum1
@@ -198,11 +220,15 @@ def _paged_kernel(
             if correct:
                 s = _correct_strided(s, d1, d2, bad, s_kv)
 
-        # ---- per-request ragged mask + running max -----------------------
+        # ---- per-row causal + window + ragged mask, running max ----------
+        # Tile rows are group-major: row r holds (group g = r // C, chunk
+        # row c = r % C); chunk row c queries absolute position base + c.
+        crow = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % chunk
+        qpos = base + crow
         cols = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = (cols < kv_len) & (q_pos - cols < window)
+        mask = (cols <= qpos) & (qpos - cols < window) & (crow < q_len)
         s_m = jnp.where(mask, s, MASK_VALUE)
-        blockmax = jnp.max(s_m, axis=1, keepdims=True)          # (grp, 1)
+        blockmax = jnp.max(s_m, axis=1, keepdims=True)      # (grp * C, 1)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, blockmax)
         m_new = _flip(m_new, on=_hit(fault_ref, Site.ROWMAX, b=b, h=h, j=j),
@@ -252,7 +278,7 @@ def _paged_kernel(
         p = jnp.where(mask, p_raw, 0.0)
 
         # ---- rescale + rowsum (+ shadow) ---------------------------------
-        alpha = jnp.where(alive, jnp.exp(m_prev - m_new), 1.0)  # (grp, 1)
+        alpha = jnp.where(alive, jnp.exp(m_prev - m_new), 1.0)
         l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
         l_new = _flip(l_new, on=_hit(fault_ref, Site.ROWSUM, b=b, h=h, j=j),
                       row=fault_ref[P_ROW], col=jnp.int32(0),
@@ -269,7 +295,7 @@ def _paged_kernel(
         # ---- GEMM II + rescale, checksums carried ------------------------
         pv = jax.lax.dot_general(
             p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)                 # (grp, D)
+            preferred_element_type=jnp.float32)             # (grp * C, D)
         acc_new = alpha * acc_scr[...] + pv
         acc_new = _flip(acc_new, on=_hit(fault_ref, Site.GEMM2, b=b, h=h, j=j),
                         row=fault_ref[P_ROW], col=fault_ref[P_COL],
@@ -301,7 +327,11 @@ def _paged_kernel(
         l_f = l_scr[...]
         r_f = r_scr[...]
         if ft:
-            upper = kv_len.astype(jnp.float32) + 1e-3
+            # per-row SNVR bound: chunk row c attends at most qpos + 1 keys
+            # (window-limited rows only tighten further; kv_len caps all)
+            crow = jax.lax.broadcasted_iota(jnp.int32, l_f.shape, 0) % chunk
+            upper = jnp.minimum(base + crow + 1, kv_len).astype(
+                jnp.float32) + 1e-3
             in_range = (l_f >= r_f - 1e-3) & (l_f <= upper) & jnp.isfinite(l_f)
             if shadow_rowsum:
                 lsh = lsh_scr[...]
@@ -346,6 +376,7 @@ def efta_paged_attention_pallas(
     v_checks: cks.Checksums,
     block_tables: jax.Array,
     kv_lens: jax.Array,
+    q_lens: Optional[jax.Array] = None,
     *,
     cfg: EFTAConfig,
     check_threshold: Optional[float] = None,
@@ -354,22 +385,32 @@ def efta_paged_attention_pallas(
     fault: Optional[jax.Array] = None,
     interpret: bool = True,
 ) -> PagedReport:
-    """Fused batched ragged paged-attention decode with in-loop verification.
+    """Fused batched ragged paged attention with in-loop verification.
 
-    ``q``: (B, H, D) — the current decode token's query per request.
-    ``k_pool``/``v_pool``: (num_blocks + 1, Hkv, block_size, D) paged pools
-    (row 0 is the null block). ``k_checks``/``v_checks``: the resident
-    :func:`repro.core.checksum.encode_kv` pairs, (num_blocks + 1, Hkv,
-    check_stride, D). ``block_tables``: (B, table_len) int32, null-padded
-    with 0. ``kv_lens``: (B,) int32 valid tokens per request *including* the
-    current one (its K/V row must already sit in the pool — append before
-    attend, exactly like the gather path's in-step scatter).
+    ``q``: (B, H, D) — single decode token per request — or (B, H, C, D) —
+    a multi-token chunk per request (unified prefill / extend / repair /
+    decode). ``k_pool``/``v_pool``: (num_blocks + 1, Hkv, block_size, D)
+    paged pools (row 0 is the null block). ``k_checks``/``v_checks``: the
+    resident :func:`repro.core.checksum.encode_kv` pairs, (num_blocks + 1,
+    Hkv, check_stride, D). ``block_tables``: (B, table_len) int32,
+    null-padded with 0. ``kv_lens``: (B,) int32 valid tokens per request
+    *including* the chunk's rows (their K/V must already sit in the pool —
+    append before attend, exactly like the gather path's in-step scatter).
+    ``q_lens``: (B,) int32 valid rows of each request's chunk (default: all
+    C); chunk row ``c < q_len`` queries position ``kv_len - q_len + c``,
+    rows past ``q_len`` are fully-masked padding and a request with
+    ``q_len == 0`` contributes nothing (its resident blocks are still
+    streamed and verified).
 
     ``window``: optional sliding-window size — python int or traced int32
     scalar (per-layer global/local selection). ``fault``: optional int32[8]
-    descriptor (see module docstring). Returns a :class:`PagedReport`.
+    descriptor (see module docstring). Returns a :class:`PagedReport` whose
+    ``out`` matches ``q``'s shape.
     """
-    b, h, d = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, :, None, :]
+    b, h, chunk, d = q.shape
     nb1, hkv, bs, hd = k_pool.shape
     if hd != d:
         raise ValueError(f"head_dim mismatch: q {d} vs pool {hd}")
@@ -383,27 +424,32 @@ def efta_paged_attention_pallas(
     kv_thr = (check_threshold if check_threshold is not None
               else cks.kv_block_threshold(k_pool.dtype))
 
-    qr = q.reshape(b, hkv, grp, d)
+    # fold GQA group AND chunk into the GEMM rows, group-major: row
+    # r = g * C + c so every per-row helper stays a plain lane-wise op
+    qr = q.reshape(b, hkv, grp * chunk, d)
     if fault is None:
         fault = jnp.zeros((8,), jnp.int32)
+    if q_lens is None:
+        q_lens = jnp.full((b,), chunk, jnp.int32)
     win = (jnp.full((1,), NO_WINDOW, jnp.int32) if window is None
            else jnp.asarray(window, jnp.int32).reshape(1))
 
     kernel = functools.partial(
         _paged_kernel,
-        sm_scale=scale, block_size=bs, n_blocks=mb, s_kv=s_kv, s_out=s_out,
-        kv_thr=kv_thr, mode=cfg.mode, unified=cfg.unified,
+        sm_scale=scale, block_size=bs, n_blocks=mb, chunk=chunk, s_kv=s_kv,
+        s_out=s_out, kv_thr=kv_thr, mode=cfg.mode, unified=cfg.unified,
         shadow_rowsum=cfg.shadow_rowsum, shadow_rowmax=cfg.shadow_rowmax,
         eps1=eps1, eps2=eps2, eps3=eps3)
 
-    def pool_map(bi, hi, j, fault, bt, kvlen, win):
+    def pool_map(bi, hi, j, fault, bt, kvlen, qlen, win):
         return (bt[bi, j], hi, 0, 0)
 
+    rows = grp * chunk
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
+        num_scalar_prefetch=5,
         grid=(b, hkv, mb),
         in_specs=[
-            pl.BlockSpec((None, None, grp, d),
+            pl.BlockSpec((None, None, rows, d),
                          lambda bi, hi, j, *_: (bi, hi, 0, 0)),
             pl.BlockSpec((None, None, bs, d), pool_map),
             pl.BlockSpec((None, None, bs, d), pool_map),
@@ -413,20 +459,20 @@ def efta_paged_attention_pallas(
             pl.BlockSpec((None, None, cs, d), pool_map),
         ],
         out_specs=[
-            pl.BlockSpec((None, None, grp, d),
+            pl.BlockSpec((None, None, rows, d),
                          lambda bi, hi, j, *_: (bi, hi, 0, 0)),
             pl.BlockSpec((None, None, 6), lambda bi, hi, j, *_: (bi, hi, 0)),
             pl.BlockSpec((None, None, 1, mb),
                          lambda bi, hi, j, *_: (bi, hi, 0, 0)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((grp, 1), jnp.float32),    # m
-            pltpu.VMEM((grp, 1), jnp.float32),    # l
-            pltpu.VMEM((grp, 1), jnp.float32),    # l shadow
-            pltpu.VMEM((grp, 1), jnp.float32),    # r (SNVR bound)
-            pltpu.VMEM((grp, d), jnp.float32),    # output accumulator
-            pltpu.VMEM((grp, s_out), jnp.float32),   # O checksum 1
-            pltpu.VMEM((grp, s_out), jnp.float32),   # O checksum 2
+            pltpu.VMEM((rows, 1), jnp.float32),   # m
+            pltpu.VMEM((rows, 1), jnp.float32),   # l
+            pltpu.VMEM((rows, 1), jnp.float32),   # l shadow
+            pltpu.VMEM((rows, 1), jnp.float32),   # r (SNVR bound)
+            pltpu.VMEM((rows, d), jnp.float32),   # output accumulator
+            pltpu.VMEM((rows, s_out), jnp.float32),  # O checksum 1
+            pltpu.VMEM((rows, s_out), jnp.float32),  # O checksum 2
             pltpu.SMEM((6,), jnp.int32),          # detection counters
             pltpu.SMEM((1,), jnp.float32),        # running max|V| (NVR)
         ],
@@ -436,7 +482,7 @@ def efta_paged_attention_pallas(
         kernel,
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((b, hkv, grp, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hkv, rows, d), q.dtype),
             jax.ShapeDtypeStruct((b, hkv, 6), jnp.int32),
             jax.ShapeDtypeStruct((b, hkv, 1, mb), jnp.int32),
         ],
@@ -444,24 +490,28 @@ def efta_paged_attention_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(fault, jnp.asarray(block_tables, jnp.int32),
-      jnp.asarray(kv_lens, jnp.int32), win,
+      jnp.asarray(kv_lens, jnp.int32), jnp.asarray(q_lens, jnp.int32), win,
       qr, k_pool, v_pool, k_checks.c1, k_checks.c2, v_checks.c1, v_checks.c2)
 
+    out = out.reshape(b, h, chunk, d)
     return PagedReport(
-        out=out.reshape(b, h, d),
+        out=out[:, :, 0, :] if squeeze else out,
         detected=rep.sum(axis=1),
         bad_blocks=jnp.any(bad > 0, axis=(1, 2)))
 
 
-def paged_fault_descriptor(spec, grp: int) -> Tuple[jax.Array, jax.Array]:
+def paged_fault_descriptor(spec, grp: int,
+                           chunk: int = 1) -> Tuple[jax.Array, jax.Array]:
     """Translate the serve engine's per-slot :class:`FaultSpec` batch into
     the fused kernel's int32[8] descriptor.
 
     ``spec`` fields are (n_slots, n_faults); the single-event-upset model
     means at most one entry is enabled per step, so the first enabled entry
     wins. The vmapped gather path addresses the score tile as (head, row);
-    the fused kernel's tile rows are the GQA group, so the query-head
-    coordinate splits into (kv_head = head // grp, group_row = head % grp).
+    the fused kernel's tile rows fold the GQA group and the chunk axis, so
+    the query-head coordinate splits into (kv_head = head // grp, tile row
+    = (head % grp) * chunk) — the SEU strikes chunk row 0, which is a valid
+    row for every request that fed at least one token this step.
     """
     site = spec.site.reshape(-1)
     nf = spec.site.shape[-1]
@@ -475,5 +525,5 @@ def paged_fault_descriptor(spec, grp: int) -> Tuple[jax.Array, jax.Array]:
     head = take(spec.head)
     return jnp.stack([
         take(spec.site), take(spec.block), (idx // nf).astype(jnp.int32),
-        head // grp, head % grp, take(spec.col), take(spec.bit), on,
+        head // grp, (head % grp) * chunk, take(spec.col), take(spec.bit), on,
     ]).astype(jnp.int32)

@@ -77,15 +77,17 @@ def attention(
 #     ``(.., Hkv, S, hd)`` layout every impl above already accepts (token
 #     position == table order), so EFTA / flash / reference all serve paged
 #     caches for free — at the cost of an extra HBM round-trip per byte and
-#     a separate full-pool checksum pass. This is the portable baseline and
-#     the path prefill / chunked-extend / block-repair always use.
+#     a separate full-pool checksum pass. This is the portable baseline;
+#     its prefill / prefix-extend / block-repair run through one
+#     fixed-width chunked ``Model.extend`` program.
 #   * fused (``repro.kernels.efta_paged.efta_paged_attention_pallas``):
-#     decode-only Pallas kernel whose BlockSpec index maps read the block
-#     table directly (scalar prefetch), with the batch axis in the grid
-#     (native batched ragged decode) and the resident block-checksum verify
-#     folded into the KV streaming loop. Dispatched via
-#     ``PagedServeEngine(kernel="fused")`` through
-#     ``repro.models.attention.PagedKVCache``.
+#     unified multi-token Pallas kernel whose BlockSpec index maps read the
+#     block table directly (scalar prefetch), with the batch axis in the
+#     grid (native batched ragged chunks: per-request ``kv_len`` AND
+#     ``q_len`` masking serve mixed prefill/extend/repair/decode batches in
+#     one program) and the resident block-checksum verify folded into the
+#     KV streaming loop. Dispatched via ``PagedServeEngine(kernel="fused")``
+#     through ``repro.models.attention.PagedKVCache``.
 
 
 def merge_block_axes(x: jax.Array) -> jax.Array:

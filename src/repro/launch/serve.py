@@ -67,7 +67,7 @@ def main():
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="paged pool size (0 = ring-equivalent capacity)")
-    ap.add_argument("--kernel", choices=("gather", "fused"), default="gather",
+    ap.add_argument("--kernel", choices=("gather", "fused"), default=None,
                     help="paged decode backend: 'gather' materializes each "
                          "table as a contiguous view and verifies checksums "
                          "outside the kernel (portable baseline); 'fused' "
@@ -80,7 +80,28 @@ def main():
                          "folds every table block each step; 'stamped' skips "
                          "blocks untouched since their last verified read "
                          "(amortized checksums; detection of a flip in a "
-                         "stamped block is deferred to its next write)")
+                         "stamped block is deferred to its next write or "
+                         "the next scrub pass)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="serve through the unified multi-token step "
+                         "(implies --paged --kernel fused): every engine "
+                         "iteration is one mixed batch in which new prompts "
+                         "prefill a chunk while running requests decode — "
+                         "one compiled program instead of one per prompt "
+                         "bucket, and long prompts never head-of-line-block "
+                         "decodes")
+    ap.add_argument("--chunk-size", type=int, default=0,
+                    help="chunk width of the unified multi-token step "
+                         "(0 = 2 * block_size); also the gather backend's "
+                         "fixed prefill/extend/repair chunk width")
+    ap.add_argument("--chunk-budget", type=int, default=0,
+                    help="max prompt tokens processed per mixed step "
+                         "(0 = unbounded); decodes always proceed")
+    ap.add_argument("--scrub-interval", type=int, default=0,
+                    help="with --kv-verify stamped: re-fold the oldest-"
+                         "verified live blocks every N committed steps "
+                         "(bounds the stamped policy's deferred-detection "
+                         "window; 0 = off)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="tokens of system prompt shared by every request "
                          "(exercises the prefix cache)")
@@ -92,10 +113,20 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     log = get_logger("serve")
-    if not args.paged and (args.kernel != "gather"
-                           or args.kv_verify != "always"):
-        ap.error("--kernel/--kv-verify configure the paged engine; "
-                 "add --paged")
+    if args.chunked_prefill:
+        if args.kernel == "gather":
+            ap.error("--chunked-prefill is the fused unified step; it "
+                     "contradicts --kernel gather (the gather backend "
+                     "chunks its prefill at admission instead)")
+        args.paged = True
+        args.kernel = "fused"
+    if not args.paged and (args.kernel is not None
+                           or args.kv_verify != "always"
+                           or args.chunk_size or args.chunk_budget
+                           or args.scrub_interval):
+        ap.error("--kernel/--kv-verify/--chunk-size/--chunk-budget/"
+                 "--scrub-interval configure the paged engine; add --paged")
+    args.kernel = args.kernel or "gather"
 
     cfg = get_config(args.arch)
     if args.ft_mode:
@@ -116,7 +147,10 @@ def main():
                                cache_len=args.cache_len or None,
                                block_size=args.block_size,
                                num_blocks=args.num_blocks or None,
-                               kernel=args.kernel, kv_verify=args.kv_verify)
+                               kernel=args.kernel, kv_verify=args.kv_verify,
+                               chunk_size=args.chunk_size or None,
+                               chunk_budget=args.chunk_budget or None,
+                               scrub_interval=args.scrub_interval)
     else:
         eng = ServeEngine(model, params, n_slots=args.slots,
                           cache_len=args.cache_len or None)
@@ -177,10 +211,12 @@ def main():
     if args.paged:
         ps, xs = eng.paged_stats, eng.pool.prefix.stats
         log.info("paged cache: prefix hits=%d/%d tokens, kv detected=%d "
-                 "repaired=%d preemptions=%d evictions=%d",
+                 "repaired=%d scrubbed=%d preemptions=%d evictions=%d "
+                 "chunked-prefill tokens=%d",
                  xs.hit_tokens, xs.lookup_tokens, ps.kv_detected_blocks,
-                 ps.kv_repaired_blocks, ps.preemptions,
-                 eng.pool.blocks.stats.evictions)
+                 ps.kv_repaired_blocks, ps.kv_scrubbed_blocks,
+                 ps.preemptions, eng.pool.blocks.stats.evictions,
+                 ps.chunked_prefill_tokens)
     for rid in sorted(outs):
         st = eng.telemetry.requests.get(rid)
         log.info("request %d: %d tokens, detected=%d corrected=%d retries=%d",

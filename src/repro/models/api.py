@@ -136,18 +136,25 @@ class Model:
 
     def extend(self, params, tokens, cache, *, lengths=None, mesh=None,
                fault=None):
-        """Chunked prefill: append ``tokens`` (B, S) at the cache's current
-        position, attending over the cached context *and* causally within the
-        chunk — a multi-token :meth:`decode_step`. This is what makes prefix
-        caching work: a prompt whose first ``pos`` tokens already sit in the
-        cache only pays for its suffix. Masked-out cache slots contribute
-        exactly zero to the attention accumulators, so the result is
-        bit-identical to prefilling the full sequence at once (same dtypes).
+        """Unified chunked step: append ``tokens`` (B, S) at the cache's
+        current position, attending over the cached context *and* causally
+        within the chunk — a multi-token :meth:`decode_step`. This is the
+        single entry point behind prefill, prefix-extend, block repair and
+        decode (``S = 1``): a thin wrapper over ``forward(mode="decode")``,
+        which dispatches on the cache type — contiguous :class:`KVCache`
+        rows take the ring path, a :class:`PagedKVCache` takes the fused
+        multi-token paged kernel with per-request ``q_len`` chunk raggedness
+        (mixed prefill + decode batches in one compiled program). Masked-out
+        cache slots contribute exactly zero to the attention accumulators,
+        so the result is bit-identical to prefilling the full sequence at
+        once (same dtypes) — which is what makes prefix caching and chunked
+        prefill exact.
 
         ``lengths`` (B,) gathers each row's logits at its true (unpadded)
-        last token, as in :meth:`prefill`. Positions past ``cache_len`` would
-        ring-wrap and clobber context — callers must keep
-        ``pos + S <= cache_len``. Returns (last logits, report, cache).
+        last token, as in :meth:`prefill`. Contiguous caches must keep
+        ``pos + S <= cache_len`` (a ring wrap would clobber context); paged
+        caches bound the chunk by their block tables instead. Returns
+        (last logits, report, cache).
         """
         batch = {"tokens": tokens}
         logits, rep, _, new_cache = forward(params, self.cfg, batch, mesh=mesh,

@@ -34,13 +34,17 @@ class KVCache(NamedTuple):
 class PagedKVCache(NamedTuple):
     """One layer's view of the paged serve engine's checksummed block pool.
 
-    Passed in place of :class:`KVCache` to run decode natively batched over
+    Passed in place of :class:`KVCache` to run the unified batched step over
     ragged requests through the fused paged-attention kernel: K/V stay in the
     shared pool and are consumed by block table, never gathered into a
-    contiguous view. ``bad`` is an *output* plane: per-(request, table-slot)
+    contiguous view. The step is *multi-token*: each request feeds a chunk of
+    ``q_len`` rows (1 = decode, up to the chunk width = prefill / extend /
+    repair), so one mixed batch serves every regime through one compiled
+    program. ``bad`` is an *output* plane: per-(request, table-slot)
     resident-checksum mismatches found this step (in-kernel for streamed
-    blocks, at append time for the tail block), which the engine's repair
-    path consumes. Stacked over layers for the transformer's block scan.
+    blocks, at append time for partially-overwritten blocks), which the
+    engine's repair path consumes. Stacked over layers for the transformer's
+    block scan.
     """
 
     k: jax.Array     # (num_blocks+1, Hkv, block_size, hd); row 0 = null block
@@ -51,6 +55,7 @@ class PagedKVCache(NamedTuple):
     vc2: jax.Array
     bt: jax.Array    # (B, table_len) int32 per-request block tables (0-padded)
     pos: jax.Array   # (B,) int32 tokens resident before this step
+    q_len: jax.Array  # (B,) int32 valid chunk rows this step (0 = idle slot)
     bad: jax.Array   # (B, table_len) int32 mismatch flags (in/out)
 
 
@@ -83,61 +88,86 @@ def init_cache(batch: int, a: AttnCfg, *, cache_len: int, dtype,
         ck=jnp.zeros(cshape, dtype), cv=jnp.zeros(cshape, dtype))
 
 
-def _paged_decode(q, k, v, cache: PagedKVCache, *, cfg: EFTAConfig, window,
-                  sm_scale, fault, interpret: bool):
-    """One natively batched ragged decode step against the paged block pool.
+def _paged_chunk(q, k, v, cache: PagedKVCache, *, cfg: EFTAConfig, window,
+                 sm_scale, fault, interpret: bool):
+    """One unified batched multi-token step against the paged block pool.
 
-    ``q``/``k``/``v``: this step's projected (+RoPE'd) (B, H|Hkv, 1, hd)
-    tensors. Appends the new K/V row into each request's tail block, then
-    dispatches the fused paged-attention kernel over the block tables —
-    append-before-attend, exactly mirroring the gather path's in-step
-    scatter, so the current token attends to itself.
+    ``q``/``k``/``v``: this step's projected (+RoPE'd) (B, H|Hkv, C, hd)
+    chunk tensors; request ``b`` feeds ``cache.q_len[b]`` valid rows at
+    positions ``pos .. pos + q_len - 1`` (1 row = decode, more = chunked
+    prefill / extend / block repair — one mixed batch, one program).
+    Appends every valid row's K/V into its request's blocks (a chunk may
+    straddle a block edge), regenerates the checksums of exactly the blocks
+    the chunk touched, then dispatches the fused paged-attention kernel over
+    the block tables — append-before-attend, exactly mirroring the gather
+    path's in-step scatter, so each chunk row attends to itself and its
+    predecessors.
 
     Verification split: the kernel verifies every streamed block in its KV
-    loop, but the append below refreshes the *tail* block's checksums from
+    loop, but the append below refreshes the touched blocks' checksums from
     current content — doing that over a corrupted row would launder the
-    corruption into a consistent (permanently silent) state. So the tail
-    block is verified here against its pre-append checksums first, and its
-    flag joins the kernel's ``bad`` plane. ``fault`` is the fused kernel's
-    int32[8] descriptor (see ``repro.kernels.efta_paged``), not a FaultSpec.
+    corruption into a consistent (permanently silent) state. Only the
+    *first* touched block can hold prior valid rows (``pos % bs > 0``;
+    later touched blocks are written from row 0), so it is verified here
+    against its pre-append checksums first, and its flag joins the kernel's
+    ``bad`` plane. ``fault`` is the fused kernel's int32[8] descriptor (see
+    ``repro.kernels.efta_paged``), not a FaultSpec.
     """
     bs = cache.k.shape[2]
     cs = cache.kc1.shape[2]
     thr = cks.kv_block_threshold(cache.k.dtype)
-    bt, pos = cache.bt, cache.pos
-    jtail = pos // bs                                          # (B,)
-    tgt = jnp.take_along_axis(bt, jtail[:, None], axis=1)[:, 0]
+    bt, pos, q_len = cache.bt, cache.pos, cache.q_len
+    mb = bt.shape[1]
+    c_width = k.shape[2]
+    j0 = pos // bs                                             # (B,)
     off = pos % bs
 
-    tail_k = cache.k[tgt]                                      # (B,Hkv,bs,hd)
-    tail_v = cache.v[tgt]
+    # -- laundering guard: pre-verify the first touched block's prior rows
+    tgt0 = jnp.take_along_axis(bt, j0[:, None], axis=1)[:, 0]
     bad_tk, _ = cks.verify_block(
-        tail_k, cks.Checksums(cache.kc1[tgt], cache.kc2[tgt]), cs,
+        cache.k[tgt0], cks.Checksums(cache.kc1[tgt0], cache.kc2[tgt0]), cs,
         threshold=thr)
     bad_tv, _ = cks.verify_block(
-        tail_v, cks.Checksums(cache.vc1[tgt], cache.vc2[tgt]), cs,
+        cache.v[tgt0], cks.Checksums(cache.vc1[tgt0], cache.vc2[tgt0]), cs,
         threshold=thr)
-    tail_bad = jnp.any(bad_tk | bad_tv, axis=-1) & (tgt > 0)   # (B,)
+    tail_bad = (jnp.any(bad_tk | bad_tv, axis=-1) & (tgt0 > 0)
+                & (off > 0) & (q_len > 0))                     # (B,)
 
-    row_k = k[:, :, 0, :].astype(cache.k.dtype)
-    row_v = v[:, :, 0, :].astype(cache.v.dtype)
-    new_k = cache.k.at[tgt, :, off, :].set(row_k)
-    new_v = cache.v.at[tgt, :, off, :].set(row_v)
-    kc = cks.encode_kv(new_k[tgt], cs)
-    vc = cks.encode_kv(new_v[tgt], cs)
-    kc1 = cache.kc1.at[tgt].set(kc.c1)
-    kc2 = cache.kc2.at[tgt].set(kc.c2)
-    vc1 = cache.vc1.at[tgt].set(vc.c1)
-    vc2 = cache.vc2.at[tgt].set(vc.c2)
+    # -- scatter the chunk's K/V rows into their blocks (append-before-
+    # attend); padding rows (c >= q_len) divert to the null scratch block
+    c_idx = jnp.arange(c_width, dtype=jnp.int32)
+    p_abs = pos[:, None] + c_idx[None, :]                      # (B, C)
+    valid = c_idx[None, :] < q_len[:, None]
+    jrow = jnp.clip(p_abs // bs, 0, mb - 1)
+    tgt_rows = jnp.where(valid, jnp.take_along_axis(bt, jrow, axis=1), 0)
+    offs = jnp.where(valid, p_abs % bs, 0)
+    row_k = k.transpose(0, 2, 1, 3).astype(cache.k.dtype)      # (B,C,Hkv,hd)
+    row_v = v.transpose(0, 2, 1, 3).astype(cache.v.dtype)
+    new_k = cache.k.at[tgt_rows, :, offs, :].set(row_k)
+    new_v = cache.v.at[tgt_rows, :, offs, :].set(row_v)
+
+    # -- checksum generation for exactly the blocks the chunk touched (the
+    # first may be partial, the rest start at row 0; untouched -> null)
+    nt = (c_width + bs - 2) // bs + 1      # max blocks a C-row chunk spans
+    jt = j0[:, None] + jnp.arange(nt, dtype=jnp.int32)[None, :]    # (B, nt)
+    last = (pos + jnp.maximum(q_len, 1) - 1) // bs
+    touched = (jt <= last[:, None]) & (q_len[:, None] > 0)
+    tid = jnp.where(
+        touched, jnp.take_along_axis(bt, jnp.clip(jt, 0, mb - 1), axis=1), 0)
+    kc = cks.encode_kv(new_k[tid], cs)                 # (B, nt, Hkv, cs, hd)
+    vc = cks.encode_kv(new_v[tid], cs)
+    kc1 = cache.kc1.at[tid].set(kc.c1)
+    kc2 = cache.kc2.at[tid].set(kc.c2)
+    vc1 = cache.vc1.at[tid].set(vc.c1)
+    vc2 = cache.vc2.at[tid].set(vc.c2)
 
     rep = efta_paged_attention_pallas(
-        q[:, :, 0, :], new_k, new_v,
+        q, new_k, new_v,
         cks.Checksums(kc1, kc2), cks.Checksums(vc1, vc2),
-        bt, pos + 1, cfg=cfg, check_threshold=thr, window=window,
+        bt, pos + q_len, q_len, cfg=cfg, check_threshold=thr, window=window,
         sm_scale=sm_scale, fault=fault, interpret=interpret)
 
-    mb = bt.shape[1]
-    tail_plane = (jnp.arange(mb, dtype=jnp.int32)[None, :] == jtail[:, None]
+    tail_plane = (jnp.arange(mb, dtype=jnp.int32)[None, :] == j0[:, None]
                   ) & tail_bad[:, None]
     new_bad = jnp.maximum(cache.bad,
                           jnp.maximum(rep.bad_blocks, tail_plane)
@@ -148,8 +178,9 @@ def _paged_decode(q, k, v, cache: PagedKVCache, *, cfg: EFTAConfig, window,
         corrected=det if cfg.mode == "correct" else det * 0,
         max_delta=jnp.zeros((3,), jnp.float32))
     new_cache = cache._replace(k=new_k, v=new_v, kc1=kc1, kc2=kc2,
-                               vc1=vc1, vc2=vc2, pos=pos + 1, bad=new_bad)
-    return rep.out[:, :, None, :], report, new_cache
+                               vc1=vc1, vc2=vc2, pos=pos + q_len,
+                               bad=new_bad)
+    return rep.out, report, new_cache
 
 
 def _split_heads(x, n_heads, head_dim):
@@ -255,13 +286,14 @@ def attn_apply(
                  acfg.rope_theta).transpose(0, 2, 1, 3)
 
     if isinstance(cache, PagedKVCache):
-        # Fused paged backend: natively batched ragged decode straight off
-        # the block tables (``positions`` is (B, 1) here — per-request).
-        if mode != "decode" or s != 1:
+        # Fused paged backend: unified natively batched ragged step straight
+        # off the block tables (``positions`` is (B, S) here — per-request;
+        # S is the chunk width, with ``cache.q_len`` valid rows per slot).
+        if mode != "decode":
             raise NotImplementedError(
-                "PagedKVCache attention is single-token batched decode; "
-                "prefill/extend run through the contiguous gather path")
-        out, rep, new_cache = _paged_decode(
+                "PagedKVCache attention is the unified batched decode/"
+                "extend step; training prefill has no paged cache")
+        out, rep, new_cache = _paged_chunk(
             q, k, v, cache, cfg=cfg, window=window,
             sm_scale=acfg.softmax_scale, fault=fault, interpret=interpret)
         y = matmul(_merge_heads(out), params["wo"], ff_abft=ft.ff_abft)

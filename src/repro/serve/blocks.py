@@ -51,6 +51,10 @@ class BlockMeta:
     # policy skips re-folding it.
     gen: int = 0
     verified_gen: int = -1
+    # monotone pool-wide clock value of the last read-time verification —
+    # the background scrub pass re-folds oldest-verified-first so the
+    # stamped policy's deferred-detection window stays bounded
+    verified_at: int = -1
 
 
 @dataclasses.dataclass
@@ -84,6 +88,7 @@ class BlockPool:
             collections.OrderedDict()
         self.on_evict = lambda bid, chain_hash: None
         self.stats = PoolStats()
+        self._verify_clock = 0
 
     # -- capacity -----------------------------------------------------------
     @property
@@ -156,12 +161,20 @@ class BlockPool:
         m = self._meta.get(bid)
         if m is not None:
             m.verified_gen = m.gen
+            m.verified_at = self._verify_clock
+            self._verify_clock += 1
 
     def needs_verify(self, bid: int) -> bool:
         """True unless the block verified clean at its current generation.
         Freshly (re)allocated blocks always need a first verification."""
         m = self._meta.get(bid)
         return m is None or m.verified_gen != m.gen
+
+    def verified_at(self, bid: int) -> int:
+        """Verification recency (monotone clock; -1 = never verified).
+        The scrub pass re-folds the lowest values first."""
+        m = self._meta.get(bid)
+        return -1 if m is None else m.verified_at
 
     # -- sharing ------------------------------------------------------------
     def register(self, bid: int, chain_hash: int) -> None:

@@ -7,17 +7,29 @@ shared pool, identical prompt prefixes are stored once (hash-chain prefix
 cache + refcounted copy-on-write sharing in ``repro.serve.blocks``), and a
 preempted request frees exactly its blocks.
 
-Decode has two backends (``kernel=``): ``"gather"`` materializes each slot's
-table into the contiguous layout the ring engine already decodes
-(``repro.kernels.ops.gather_block_kv``) and vmaps the pure-JAX EFTA path;
-``"fused"`` hands the block tables straight to the fused paged-attention
-Pallas kernel (``repro.kernels.efta_paged``, through
-``models.attention.PagedKVCache``) — natively batched ragged decode, no
-contiguous materialization, read-time verification folded into the kernel's
-KV streaming loop. Both compute the same values at the same positions, so
-the paged engine is **token-identical** to the ring engine and to
-per-request sequential decoding on either backend. Prefill, chunked extend
-and block repair always run through the gather path.
+Two backends (``kernel=``), one program shape each:
+
+  * ``"fused"`` runs a **unified batched step**: every engine iteration
+    builds one mixed batch in which each slot feeds a chunk of up to
+    ``chunk_size`` tokens — new prompts prefill chunk by chunk, resumed
+    prompts extend, repairs re-prefill a block, and steady-state requests
+    decode one token — all through the *same* multi-token fused
+    paged-attention Pallas kernel (``repro.kernels.efta_paged`` via
+    ``models.attention.PagedKVCache``). There are no per-bucket prefill
+    programs and no separate extend jit: XLA compiles exactly two programs
+    (chunk width ``chunk_size`` and width 1) regardless of prompt lengths.
+    A scheduler ``chunk_budget`` bounds the prompt tokens per step so long
+    prompts never head-of-line-block other requests' decodes.
+  * ``"gather"`` (portable baseline) materializes each slot's table into the
+    contiguous layout the ring engine already decodes
+    (``repro.kernels.ops.gather_block_kv``) and vmaps the pure-JAX EFTA
+    path; prompt prefill / prefix-extend / repair run through ONE
+    fixed-width chunked ``Model.extend`` program (the former power-of-two
+    prompt buckets — one compiled program per bucket size — are retired).
+
+Both compute the same values at the same positions, so the paged engine is
+**token-identical** to the ring engine and to per-request sequential
+decoding on either backend.
 
 Fault story (the paper's resident-state gap): EFTA protects the attention
 *computation*, but KV sitting in HBM across thousands of decode steps is
@@ -28,18 +40,28 @@ and **verified at every read into a decode step** — on the gathered blocks
 outside the kernel (``gather``), or in the same kernel pass that streams the
 block (``fused``) — so a resident bit flip is detected *at read time* (site
 ``kv`` in the telemetry 6-vector). The repair is surgical: only the
-poisoned block is re-prefilled — a chunked ``Model.extend`` over that
-block's tokens against the verified preceding blocks — then the step
-retries; a repaired shared prefix block heals every request mapping it.
-``kv_verify="stamped"`` amortizes the gather backend's checksum folds over
-per-block generation stamps (``serve.blocks``): steady-state decode folds
-~one tail block per slot instead of the whole table, trading deferred
-detection of flips that land in verified-and-untouched blocks.
+poisoned block is re-prefilled — through the same unified chunked step
+(``fused``: a single-slot chunk with the position rewound to the block
+start, so repair can never recompile even under pool pressure) or the
+fixed-width extend (``gather``) — then the step retries; a repaired shared
+prefix block heals every request mapping it. ``kv_verify="stamped"``
+amortizes the gather backend's checksum folds over per-block generation
+stamps (``serve.blocks``): steady-state decode folds ~one tail block per
+slot instead of the whole table, trading deferred detection of flips that
+land in verified-and-untouched blocks. ``scrub_interval`` bounds that
+deferral: every N committed steps a background scrub re-folds the
+oldest-verified live blocks (``scrub_batch`` per pass), so a flip in a
+stamped block is caught within ``interval * ceil(live / batch)`` steps
+instead of waiting for the block's next write.
 
 Prefix caching rides the same machinery: a prompt whose leading full blocks
-hash-chain-match resident blocks skips straight to ``Model.extend`` over its
-suffix (bit-identical to full prefill — masked cache slots contribute exactly
-zero), which is where the shared-system-prompt prefill speedup comes from.
+hash-chain-match resident blocks skips straight to chunked extension over
+its suffix (bit-identical to full prefill — masked cache slots contribute
+exactly zero). Since PR 4 **decode-filled blocks register too**: whenever a
+request's generation fills a block, the block joins the token-hash chain, so
+n-best / self-consistency resampling of the same prompt + continuation
+prefix hits cache instead of re-prefilling (appends to a registered block
+copy-on-write-split as before — full blocks are immutable).
 """
 from __future__ import annotations
 
@@ -81,7 +103,9 @@ class PagedCacheStats:
     kv_repaired_blocks: int = 0    # blocks healed by re-prefill
     kv_verified_blocks: int = 0    # read-time fold verifications performed
     kv_verify_skips: int = 0       # verifies skipped by generation stamps
+    kv_scrubbed_blocks: int = 0    # blocks re-folded by the background scrub
     preemptions: int = 0
+    chunked_prefill_tokens: int = 0  # prompt tokens fed through mixed steps
 
 
 class PagedKVPool:
@@ -148,11 +172,18 @@ class PagedServeEngine(ServeEngine):
     resident for longer.
 
     ``kernel``: ``"gather"`` (portable default) or ``"fused"`` (block-table
-    Pallas kernel; interpret mode off-TPU). ``kv_verify``: ``"always"``
-    (full read-time coverage, default) or ``"stamped"`` (generation-stamped
-    fold skipping on the gather backend; the fused kernel's in-loop verify
-    is already ~free). The fused backend reads its checksum threshold from
-    ``repro.core.checksum.kv_block_threshold`` — a custom
+    Pallas kernel driving the unified mixed prefill/decode batched step;
+    interpret mode off-TPU). ``chunk_size`` is the multi-token step's chunk
+    width (>= ``block_size`` so one chunk re-prefills one block; default
+    ``2 * block_size``); ``chunk_budget`` caps prompt tokens per mixed step
+    (None = unbounded) so prompts never starve decodes. ``kv_verify``:
+    ``"always"`` (full read-time coverage, default) or ``"stamped"``
+    (generation-stamped fold skipping on the gather backend; the fused
+    kernel's in-loop verify is already ~free) — with ``scrub_interval > 0``
+    a background scrub re-folds the ``scrub_batch`` oldest-verified live
+    blocks every that many committed steps, bounding the stamped policy's
+    deferred-detection window. The fused backend reads its checksum
+    threshold from ``repro.core.checksum.kv_block_threshold`` — a custom
     ``check_threshold`` only steers the gather-side verification.
     """
 
@@ -162,8 +193,10 @@ class PagedServeEngine(ServeEngine):
                  check_stride: Optional[int] = None,
                  check_threshold: Optional[float] = None,
                  max_retries: int = 2, retry_on_detect: bool = True,
-                 min_prefill_bucket: int = 8, kernel: str = "gather",
-                 kv_verify: str = "always"):
+                 chunk_size: Optional[int] = None,
+                 chunk_budget: Optional[int] = None,
+                 kernel: str = "gather", kv_verify: str = "always",
+                 scrub_interval: int = 0, scrub_batch: int = 4):
         if block_size < 1:
             raise ValueError("block_size must be >= 1")
         if kernel not in ("gather", "fused"):
@@ -185,14 +218,33 @@ class PagedServeEngine(ServeEngine):
         self.check_threshold = check_threshold
         self.kernel = kernel
         self.kv_verify = kv_verify
+        self.chunk_size = min(chunk_size or 2 * block_size, cl)
+        if self.chunk_size < block_size:
+            raise ValueError(
+                f"chunk_size ({self.chunk_size}) must be >= block_size "
+                f"({block_size}): block repair re-prefills one block per "
+                f"chunk")
+        if scrub_interval and kernel == "fused":
+            raise ValueError(
+                "scrub_interval is a gather/stamped amortization: the fused "
+                "kernel re-verifies every streamed block in-loop each step, "
+                "so a background scrub would never run there")
+        self.scrub_interval = scrub_interval
+        self.scrub_batch = scrub_batch
         super().__init__(model, params, n_slots=n_slots, cache_len=cl,
                          max_retries=max_retries,
-                         retry_on_detect=retry_on_detect,
-                         min_prefill_bucket=min_prefill_bucket)
+                         retry_on_detect=retry_on_detect)
+        self.scheduler.chunk_budget = chunk_budget
         self.paged_stats = PagedCacheStats()
-        # host mirrors of the device block tables / positions
+        # host mirrors of the device block tables / positions, plus the
+        # per-slot feed queue: tokens whose KV is not yet resident — the
+        # prompt suffix while prefilling, exactly the pending token once
+        # decoding. One rule drives the unified step: feed up to chunk_size
+        # queue tokens; when the queue drains, sample (the sample becomes
+        # the next queue entry).
         self._bt = np.zeros((n_slots, self.max_blocks), np.int32)
         self._pos = np.zeros((n_slots,), np.int32)
+        self._queue: List[List[int]] = [[] for _ in range(n_slots)]
         self._admit_seq = 0
         # consecutive steps abandoned because corruption outlived repair
         self._poisoned_steps = 0
@@ -206,10 +258,11 @@ class PagedServeEngine(ServeEngine):
             (n_slots, self.max_blocks)).copy()
         self._sel_width = min(4, self.max_blocks)
         if kernel == "fused":
-            self._decode = jax.jit(self._decode_fused_fn)
+            self._step_fused = jax.jit(self._step_fused_fn)
         self._gather_ctx = jax.jit(self._gather_ctx_fn)
         self._extend = jax.jit(self._extend_fn)
         self._scatter = jax.jit(self._scatter_fn)
+        self._scrub = jax.jit(self._scrub_fn)
         self._copy_block = jax.jit(self._copy_block_fn)
         self._flip = jax.jit(self._flip_fn, static_argnames=("into",))
 
@@ -268,8 +321,9 @@ class PagedServeEngine(ServeEngine):
 
     def _decode_fn(self, params, tokens, state, bt, pos, faults, temps,
                    topks, seeds, rids, counters, verify_sel):
-        """One batched paged decode step: gather-by-block-table, read-time
-        checksum verify, vmapped EFTA decode, append + checksum update."""
+        """One batched paged decode step on the gather backend: gather-by-
+        block-table, read-time checksum verify, vmapped EFTA decode, append
+        + checksum update."""
         cfg = self.model.cfg
         a = cfg.attn
         L, ns, bs = cfg.num_layers, self.n_slots, self.block_size
@@ -318,28 +372,35 @@ class PagedServeEngine(ServeEngine):
                                     keys=keys)
         return next_tokens, rep, bad, new_state
 
-    def _decode_fused_fn(self, params, tokens, state, bt, pos, faults, temps,
-                         topks, seeds, rids, counters, verify_sel):
-        """One batched paged decode step on the fused backend: the model's
+    def _step_fused_fn(self, params, tokens, state, bt, pos, q_lens, faults,
+                       temps, topks, seeds, rids, counters):
+        """One unified batched step on the fused backend: every slot feeds a
+        chunk of ``q_lens[slot]`` tokens (0 = idle, 1 = decode, more =
+        chunked prefill / prefix-extend / block repair) and the model's
         attention consumes the block pool *directly* through
         :class:`repro.models.attention.PagedKVCache` — one natively batched
-        ragged kernel launch per layer, no contiguous gather, resident block
-        checksums verified inside the kernel's KV streaming loop (so
-        ``verify_sel`` is moot: in-loop verification is ~free). The fault
-        batch is translated to the kernel's single-SEU descriptor."""
-        del verify_sel
+        ragged multi-token kernel launch per layer, no contiguous gather,
+        resident block checksums verified inside the kernel's KV streaming
+        loop, chunk-appended rows checksum-encoded in the same step. The
+        fault batch is translated to the kernel's single-SEU descriptor
+        (striking chunk row 0 of its target slot). ``tokens.shape[1]`` is
+        the only shape degree of freedom, so the engine compiles exactly two
+        of these: width ``chunk_size`` and width 1."""
         cfg = self.model.cfg
         L = cfg.num_layers
+        ns = self.n_slots
+        chunk = tokens.shape[1]
         grp = cfg.attn.num_heads // cfg.attn.num_kv_heads
-        desc = paged_fault_descriptor(faults, grp)
+        desc = paged_fault_descriptor(faults, grp, chunk=chunk)
         cache = {"attn": PagedKVCache(
             k=state.k, v=state.v, kc1=state.kc1, kc2=state.kc2,
             vc1=state.vc1, vc2=state.vc2,
             bt=jnp.broadcast_to(bt[None], (L,) + bt.shape),
             pos=jnp.broadcast_to(pos[None], (L,) + pos.shape),
-            bad=jnp.zeros((L, self.n_slots, self.max_blocks), jnp.int32))}
-        logits, rep, new_cache = self.model.decode_step(
-            params, tokens[:, None], cache, fault=desc)
+            q_len=jnp.broadcast_to(q_lens[None], (L, ns)),
+            bad=jnp.zeros((L, ns, self.max_blocks), jnp.int32))}
+        logits, rep, new_cache = self.model.extend(
+            params, tokens, cache, lengths=q_lens, fault=desc)
         nc = new_cache["attn"]
         bad = jnp.any(nc.bad > 0, axis=0)                  # (ns, mb)
         new_state = PagedKVState(k=nc.k, v=nc.v, kc1=nc.kc1, kc2=nc.kc2,
@@ -402,6 +463,22 @@ class PagedServeEngine(ServeEngine):
             vc1=state.vc1.at[:, bids].set(cv.c1),
             vc2=state.vc2.at[:, bids].set(cv.c2))
 
+    def _scrub_fn(self, state, bids):
+        """Background-scrub verify: re-fold the resident checksums of pool
+        blocks ``bids`` (K,) straight off the pool (no gather, no attention)
+        and flag mismatches. Null padding never flags."""
+        s = self.check_stride
+        thr = self.check_threshold
+        bad_k, _ = cks.verify_block(
+            state.k[:, bids],
+            cks.Checksums(state.kc1[:, bids], state.kc2[:, bids]), s,
+            threshold=thr)
+        bad_v, _ = cks.verify_block(
+            state.v[:, bids],
+            cks.Checksums(state.vc1[:, bids], state.vc2[:, bids]), s,
+            threshold=thr)
+        return jnp.any(bad_k | bad_v, axis=(0, -1)) & (bids > NULL_BLOCK)
+
     def _copy_block_fn(self, state, src, dst):
         """Copy-on-write device copy: duplicate block ``src`` (data +
         checksums) into ``dst``."""
@@ -428,7 +505,7 @@ class PagedServeEngine(ServeEngine):
                         bit: int = 27, into: str = "k") -> None:
         """Flip one bit of pool block ``block`` (``into``: "k" | "v"). The
         corruption is persistent resident-state damage: it stays until the
-        block checksums catch it at the next gather and the engine re-prefills
+        block checksums catch it at the next read and the engine re-prefills
         the block."""
         if into not in ("k", "v"):
             raise ValueError("into must be 'k' or 'v'")
@@ -440,11 +517,20 @@ class PagedServeEngine(ServeEngine):
     # -- admission ----------------------------------------------------------
 
     def _resident_tokens(self, req: Request) -> np.ndarray:
-        """Tokens whose KV this request keeps resident: the prompt plus all
-        generated tokens except the pending one (written next step)."""
+        """Tokens whose KV this request keeps resident at steady state: the
+        prompt plus all generated tokens except the pending one (written
+        next step)."""
         gen = req.generated[:-1] if req.generated else []
         return np.concatenate([req.prompt,
                                np.asarray(gen, np.int32)]).astype(np.int32)
+
+    def _feed_tokens(self, req: Request) -> np.ndarray:
+        """Every token this request must feed through the model: the prompt
+        plus all generated tokens (the last one is the pending decode
+        input). The unified step consumes a chunk of these per iteration."""
+        return np.concatenate([req.prompt, np.asarray(req.generated,
+                                                      np.int32)
+                               ]).astype(np.int32)
 
     def _pad_bids(self, bids: Sequence[int]) -> np.ndarray:
         out = np.zeros((self.max_blocks,), np.int32)
@@ -490,16 +576,82 @@ class PagedServeEngine(ServeEngine):
         req.block_ids = []
         self._bt[slot] = 0
         self._pos[slot] = 0
+        self._queue[slot] = []
         self.pool.release(slot)
 
     def _admit(self, req: Request) -> None:
+        if self.kernel == "fused":
+            self._admit_unified(req)
+        else:
+            self._admit_gather(req)
+
+    def _admit_unified(self, req: Request) -> None:
+        """Admission on the unified backend reserves state only — no
+        compute. The prompt suffix past the prefix hit goes on the slot's
+        feed queue; the mixed batched step prefills it chunk by chunk
+        (budgeted) alongside other slots' decodes, samples the first token
+        the moment the queue drains, and from then on the queue holds
+        exactly the pending decode token."""
+        slot = req.slot
+        t_hit = req.n_prefix_hit * self.block_size
+        feed = self._feed_tokens(req)
+        self._pos[slot] = t_hit
+        self._bt[slot] = self._pad_bids(req.block_ids)
+        self._queue[slot] = [int(t) for t in feed[t_hit:]]
+        s = req.sampling
+        self._temps[slot] = s.temperature
+        self._topks[slot] = s.top_k
+        self._seeds[slot] = s.seed
+        self._rids[slot] = req.rid
+        self._counters[slot] = req.num_generated
+        req.admit_order = self._admit_seq
+        self._admit_seq += 1
+        self.stats.prefills += 1
+
+    def _chunked_fill(self, row, toks: np.ndarray, start_pos: int,
+                      det_acc, cor_acc) -> Tuple[Any, Any, int]:
+        """Feed ``toks`` into a contiguous batch-1 row cache through the ONE
+        fixed-width chunked extend program (chunks of exactly
+        ``chunk_size`` tokens; only the final chunk is padded, and only a
+        prompt running into ``cache_len`` narrows the width). Replaces the
+        former power-of-two prompt buckets — one compiled program per
+        bucket size — with a single program reused for prefill, prefix
+        extension and block repair. Returns (last-chunk logits, row,
+        retries)."""
+        none = FaultSpec.none(1)
+        C = self.chunk_size
+        i, retries = 0, 0
+        logits = None
+        n = len(toks)
+        while i < n:
+            pos = start_pos + i
+            w = min(C, self.cache_len - pos)
+            fill = min(w, n - i)
+            buf = np.zeros((1, w), np.int32)
+            buf[0, :fill] = toks[i:i + fill]
+            length = jnp.asarray([fill], jnp.int32)
+            logits, rep, new_row = self._extend(
+                self.params, jnp.asarray(buf), row, length, none)
+            det_acc[:5] += np.asarray(rep.detected, np.int64).reshape(-1)[:5]
+            cor_acc[:5] += np.asarray(rep.corrected, np.int64).reshape(-1)[:5]
+            while self._needs_retry_rows(rep, rows=None) and \
+                    retries < self.max_retries:
+                retries += 1
+                logits, rep, new_row = self._extend(
+                    self.params, jnp.asarray(buf), row, length, none)
+                det_acc[:5] += np.asarray(rep.detected).reshape(-1)[:5]
+                cor_acc[:5] += np.asarray(rep.corrected).reshape(-1)[:5]
+            row = new_row
+            i += fill
+        return logits, row, retries
+
+    def _admit_gather(self, req: Request) -> None:
         seq = self._resident_tokens(req)
         t_ctx = len(seq)
         resumed = req.num_generated > 0
         n_hit = req.n_prefix_hit
         t_hit = n_hit * self.block_size
         slot = req.slot
-        none = FaultSpec.none(1)
         det_acc = np.zeros((6,), np.int64)
         cor_acc = np.zeros((6,), np.int64)
         retries = 0
@@ -507,61 +659,27 @@ class PagedServeEngine(ServeEngine):
 
         if t_hit == t_ctx:
             pass                            # resumed & fully cached: no math
-        elif n_hit == 0:
-            t = t_ctx
-            lp = max(self._bucket(t), t)
-            padded = np.zeros((1, lp), np.int32)
-            padded[0, :t] = seq
-            row = self.model.init_cache(1, cache_len=self.cache_len)
-            length = jnp.asarray([t], jnp.int32)
-            logits, rep, new_row = self._prefill(
-                self.params, jnp.asarray(padded), row, length, none)
-            det_acc[:5] += np.asarray(rep.detected, np.int64).reshape(-1)[:5]
-            cor_acc[:5] += np.asarray(rep.corrected, np.int64).reshape(-1)[:5]
-            while self._needs_retry_rows(rep, rows=None) and \
-                    retries < self.max_retries:
-                retries += 1
-                logits, rep, new_row = self._prefill(
-                    self.params, jnp.asarray(padded), row, length, none)
-                det_acc[:5] += np.asarray(rep.detected).reshape(-1)[:5]
-                cor_acc[:5] += np.asarray(rep.corrected).reshape(-1)[:5]
-            self.pool.state = self._scatter(
-                self.pool.state, new_row, jnp.asarray(self._pad_bids(
-                    req.block_ids)), jnp.int32(t_ctx))
-            for wb in req.block_ids:
-                self.pool.blocks.note_write(wb)
         else:
-            ctx_bids = jnp.asarray(self._pad_bids(req.block_ids[:n_hit]))
-            slen = t_ctx - t_hit
-            sb = min(max(self._bucket(slen), slen), self.cache_len - t_hit)
-            toks = np.zeros((1, sb), np.int32)
-            toks[0, :slen] = seq[t_hit:]
-            length = jnp.asarray([slen], jnp.int32)
-            while True:
-                row, bad = self._gather_ctx(self.pool.state, ctx_bids,
-                                            jnp.int32(t_hit))
-                bad_idx = np.flatnonzero(np.asarray(bad))
-                if bad_idx.size == 0:
-                    break
-                # a shared prefix block rotted in HBM: repair before reuse
-                det_acc[5] += bad_idx.size
-                cor_acc[5] += bad_idx.size
-                self.paged_stats.kv_detected_blocks += int(bad_idx.size)
-                self._repair_blocks(req, bad_idx, resident=seq)
-            logits, rep, new_row = self._extend(
-                self.params, jnp.asarray(toks), row, length, none)
-            det_acc[:5] += np.asarray(rep.detected, np.int64).reshape(-1)[:5]
-            cor_acc[:5] += np.asarray(rep.corrected, np.int64).reshape(-1)[:5]
-            while self._needs_retry_rows(rep, rows=None) and \
-                    retries < self.max_retries:
-                retries += 1
-                logits, rep, new_row = self._extend(
-                    self.params, jnp.asarray(toks), row, length, none)
-                det_acc[:5] += np.asarray(rep.detected).reshape(-1)[:5]
-                cor_acc[:5] += np.asarray(rep.corrected).reshape(-1)[:5]
+            if n_hit == 0:
+                row = self.model.init_cache(1, cache_len=self.cache_len)
+            else:
+                ctx_bids = jnp.asarray(self._pad_bids(req.block_ids[:n_hit]))
+                while True:
+                    row, bad = self._gather_ctx(self.pool.state, ctx_bids,
+                                                jnp.int32(t_hit))
+                    bad_idx = np.flatnonzero(np.asarray(bad))
+                    if bad_idx.size == 0:
+                        break
+                    # a shared prefix block rotted in HBM: repair before use
+                    det_acc[5] += bad_idx.size
+                    cor_acc[5] += bad_idx.size
+                    self.paged_stats.kv_detected_blocks += int(bad_idx.size)
+                    self._repair_blocks(req, bad_idx, resident=seq)
+            logits, row, retries = self._chunked_fill(
+                row, seq[t_hit:], t_hit, det_acc, cor_acc)
             sc = [NULL_BLOCK] * n_hit + req.block_ids[n_hit:]
             self.pool.state = self._scatter(
-                self.pool.state, new_row, jnp.asarray(self._pad_bids(sc)),
+                self.pool.state, row, jnp.asarray(self._pad_bids(sc)),
                 jnp.int32(t_ctx))
             for wb in req.block_ids[n_hit:]:
                 self.pool.blocks.note_write(wb)
@@ -623,25 +741,20 @@ class PagedServeEngine(ServeEngine):
                     "paged KV pool exhausted: a single request needs more "
                     "blocks than the pool holds; raise num_blocks")
 
-    def _ensure_tail_blocks(self) -> None:
-        """Before a decode step every active slot writes one KV row at its
-        position — make sure a private tail block backs it (allocating, or
-        copy-on-write-splitting a shared tail), preempting under pressure."""
-        for req in list(self.scheduler.active_rows()):
+    def _ensure_capacity(self, req: Request, n_new: int) -> None:
+        """Back the next ``n_new`` KV rows of ``req`` (positions ``pos ..
+        pos + n_new - 1``) with writable private blocks: allocate fresh tail
+        blocks, copy-on-write-split shared ones (a registered or
+        prefix-shared block must not observe the append), preempting the
+        youngest other request under pool pressure."""
+        slot = req.slot
+        pos = int(self._pos[slot])
+        bs = self.block_size
+        for bi in range(pos // bs, (pos + max(n_new, 1) - 1) // bs + 1):
             if req.slot is None:
-                continue        # preempted by an earlier request's alloc
-            slot = req.slot
-            if req.is_done():
-                # finished at admission; decodes garbage until evicted next
-                # iteration — point its writes at the null block
-                self._bt[slot] = 0
-                self._pos[slot] = 0
-                continue
-            bi = int(self._pos[slot]) // self.block_size
+                return              # preempted (cannot happen for req itself)
             if bi >= len(req.block_ids):
                 b = self._alloc_block_or_preempt(req)
-                if req.slot is None:        # preempted itself — impossible,
-                    continue                # _preempt_for_blocks skips req
                 req.block_ids.append(b)
                 self._bt[slot, bi] = b
             else:
@@ -659,25 +772,57 @@ class PagedServeEngine(ServeEngine):
                     req.block_ids[bi] = wb
                     self._bt[slot, bi] = wb
 
+    def _ensure_tail_blocks(self) -> None:
+        """Before a gather decode step every active slot writes one KV row
+        at its position — make sure a private tail block backs it."""
+        for req in list(self.scheduler.active_rows()):
+            if req.slot is None:
+                continue        # preempted by an earlier request's alloc
+            slot = req.slot
+            if req.is_done():
+                # finished at admission; decodes garbage until evicted next
+                # iteration — point its writes at the null block
+                self._bt[slot] = 0
+                self._pos[slot] = 0
+                continue
+            self._ensure_capacity(req, 1)
+
+    # -- prefix registration (prompt AND decode-filled blocks) --------------
+
+    def _register_full_blocks(self, req: Request, old_pos: int,
+                              new_pos: int) -> None:
+        """Register every newly *completed* block of ``req`` in the
+        token-hash-chain prefix cache. Beyond shared prompts, this covers
+        decode-filled blocks: a later request replaying the same prompt +
+        continuation prefix (n-best / self-consistency resampling) hits
+        cache instead of re-prefilling. Full blocks are immutable — a
+        subsequent append to a registered block copy-on-write-splits via
+        the existing machinery."""
+        bs = self.block_size
+        if new_pos // bs <= old_pos // bs:
+            return
+        toks = self._feed_tokens(req)[:new_pos]
+        self.pool.prefix.insert(toks, req.block_ids)
+
     # -- read-time verification policy --------------------------------------
 
     def _verify_selector(self):
-        """Pick the table entries this decode attempt re-verifies.
+        """Pick the table entries this gather decode attempt re-verifies.
 
         Returns ``(sel, folds, skips)``: ``sel`` is None for full coverage
-        (the "always" policy, and the fused backend whose in-loop verify is
-        free), else an (n_slots, K) int32 selector (-1 = empty). Under the
-        generation-stamped policy only blocks written since their last
-        verified read need a fold — in steady-state decode that is one tail
-        block per slot instead of the whole table, which is where the
-        gather path's checksum overhead (the ~0.85x decode regression) goes.
-        A step needing more than K folds per slot (e.g. right after an
-        admission scattered a whole prompt) falls back to full coverage.
+        (the "always" policy), else an (n_slots, K) int32 selector (-1 =
+        empty). Under the generation-stamped policy only blocks written
+        since their last verified read need a fold — in steady-state decode
+        that is one tail block per slot instead of the whole table, which is
+        where the gather path's checksum overhead (the ~0.85x decode
+        regression) goes. A step needing more than K folds per slot (e.g.
+        right after an admission scattered a whole prompt) falls back to
+        full coverage.
         """
         live = [r for r in self.scheduler.active_rows()
                 if r.slot is not None and not r.is_done()]
         n_real = sum(len(r.block_ids) for r in live)
-        if self.kernel == "fused" or self.kv_verify == "always":
+        if self.kv_verify == "always":
             return None, n_real, 0
         sel = np.full((self.n_slots, self._sel_width), -1, np.int32)
         need_total = 0
@@ -690,6 +835,40 @@ class PagedServeEngine(ServeEngine):
             need_total += len(need)
         return sel, need_total, n_real - need_total
 
+    # -- background scrub (bounds the stamped policy's deferred window) -----
+
+    def _scrub_pass(self) -> None:
+        """Re-fold the ``scrub_batch`` oldest-verified live blocks against
+        their resident checksums — including blocks the stamped selector
+        skips as verified-and-untouched, which is exactly where a deferred
+        flip hides. A mismatch is repaired immediately through the normal
+        block re-prefill path; clean blocks refresh their verification
+        clock so the scrub cursor keeps rotating."""
+        live = {}
+        for req in self.scheduler.active_rows():
+            if req.slot is None or req.is_done():
+                continue
+            for j, bid in enumerate(req.block_ids):
+                live.setdefault(bid, (req, j))
+        if not live:
+            return
+        order = sorted(live, key=self.pool.blocks.verified_at)
+        batch = order[:self.scrub_batch]
+        padded = batch + [NULL_BLOCK] * (self.scrub_batch - len(batch))
+        bad = np.asarray(self._scrub(self.pool.state,
+                                     jnp.asarray(padded, dtype=jnp.int32)))
+        self.paged_stats.kv_scrubbed_blocks += len(batch)
+        for bid, is_bad in zip(batch, bad[:len(batch)]):
+            req, j = live[bid]
+            if is_bad:
+                self.paged_stats.kv_detected_blocks += 1
+                six = np.zeros((6,), np.int64)
+                six[5] = 1
+                self.telemetry.observe_prefill(req.rid, six, six)
+                self._repair_blocks(req, [j])
+            else:
+                self.pool.blocks.mark_verified(bid)
+
     # -- read-time repair ---------------------------------------------------
 
     def _repair_blocks(self, req: Request, bad_idx, *,
@@ -698,7 +877,59 @@ class PagedServeEngine(ServeEngine):
         """Re-prefill the poisoned blocks of one request, left to right, so
         each repair runs against already-verified (or just-repaired) context.
         Shared blocks heal in place for every request mapping them (``healed``
-        dedupes repairs of a shared block flagged from several slots)."""
+        dedupes repairs of a shared block flagged from several slots). The
+        fused backend routes every repair through the SAME unified chunked
+        program the mixed batch runs; the gather backend through the same
+        fixed-width extend as admission — either way repair never compiles
+        anything new, even under pool pressure."""
+        if self.kernel == "fused":
+            self._repair_blocks_unified(req, bad_idx, resident=resident,
+                                        healed=healed)
+        else:
+            self._repair_blocks_gather(req, bad_idx, resident=resident,
+                                       healed=healed)
+
+    def _repair_blocks_unified(self, req: Request, bad_idx, *,
+                               resident: Optional[np.ndarray] = None,
+                               healed: Optional[set] = None) -> None:
+        slot = req.slot
+        bs = self.block_size
+        if resident is None:
+            resident = self._feed_tokens(req)[:int(self._pos[slot])]
+        for j in sorted(int(i) for i in bad_idx):
+            start = j * bs
+            n_fill = min(bs, len(resident) - start)
+            if n_fill <= 0:
+                continue
+            if healed is not None:
+                if req.block_ids[j] in healed:
+                    continue
+                healed.add(req.block_ids[j])
+            # single-slot chunk with the position rewound to the block
+            # start: the kernel recomputes exactly this block's rows against
+            # the (verified) preceding context and the chunk scatter +
+            # checksum refresh rewrites only block j. Other slots ride along
+            # with q_len = 0 and are untouched.
+            tokens = np.zeros((self.n_slots, self.chunk_size), np.int32)
+            tokens[slot, :n_fill] = resident[start:start + n_fill]
+            q_lens = np.zeros((self.n_slots,), np.int32)
+            q_lens[slot] = n_fill
+            pos_vec = self._pos.copy()
+            pos_vec[slot] = start
+            _, _, _, new_state = self._step_fused(
+                self.params, jnp.asarray(tokens), self.pool.state,
+                jnp.asarray(self._bt), jnp.asarray(pos_vec),
+                jnp.asarray(q_lens), self._no_faults,
+                jnp.asarray(self._temps), jnp.asarray(self._topks),
+                jnp.asarray(self._seeds), jnp.asarray(self._rids),
+                jnp.asarray(self._counters))
+            self.pool.state = new_state
+            self.pool.blocks.note_write(req.block_ids[j])
+            self.paged_stats.kv_repaired_blocks += 1
+
+    def _repair_blocks_gather(self, req: Request, bad_idx, *,
+                              resident: Optional[np.ndarray] = None,
+                              healed: Optional[set] = None) -> None:
         bs = self.block_size
         seq = self._resident_tokens(req) if resident is None else resident
         none = FaultSpec.none(1)
@@ -714,9 +945,8 @@ class PagedServeEngine(ServeEngine):
             ctx_bids = jnp.asarray(self._pad_bids(req.block_ids[:j]))
             row, _ = self._gather_ctx(self.pool.state, ctx_bids,
                                       jnp.int32(start))
-            sb = min(max(self._bucket(n_fill), n_fill),
-                     self.cache_len - start)
-            toks = np.zeros((1, sb), np.int32)
+            w = min(self.chunk_size, self.cache_len - start)
+            toks = np.zeros((1, w), np.int32)
             toks[0, :n_fill] = seq[start:start + n_fill]
             _, _, new_row = self._extend(
                 self.params, jnp.asarray(toks), row,
@@ -733,9 +963,178 @@ class PagedServeEngine(ServeEngine):
 
     def step(self, faults: Optional[FaultSpec] = None) -> List[Request]:
         """One engine iteration. EFTA in-compute SEUs behave exactly as in
-        the ring engine; additionally every gathered KV block is checksum-
+        the ring engine; additionally every KV block read is checksum-
         verified, and a mismatch triggers block re-prefill + step retry
-        before anything is committed."""
+        before anything is committed. The fused backend runs the unified
+        mixed prefill/decode batched step; the gather backend the
+        single-token decode step (its prompts prefill at admission)."""
+        if self.kernel == "fused":
+            return self._step_unified(faults)
+        return self._step_gather(faults)
+
+    def _step_unified(self, faults: Optional[FaultSpec] = None
+                      ) -> List[Request]:
+        decision = self.scheduler.step(self._try_admit, self._release_request)
+        for req in decision.admitted:
+            self._admit(req)
+        finished = list(decision.evicted)
+        for r in self.scheduler.active_rows():
+            if r.is_done() and r.slot is not None:
+                # finished at admission; computes garbage until evicted next
+                # iteration — park its writes on the null block
+                self._bt[r.slot] = 0
+                self._pos[r.slot] = 0
+                self._queue[r.slot] = []
+        active_reqs = [r for r in self.scheduler.active_rows()
+                       if not r.is_done()]
+        if not active_reqs:
+            return finished
+
+        # chunk plan: one token per request unconditionally (decodes never
+        # starve), prompt surplus FCFS within the scheduler's chunk budget
+        grants = self.scheduler.plan_chunks(
+            [(r, len(self._queue[r.slot])) for r in active_reqs],
+            self.chunk_size)
+        for r in list(active_reqs):
+            if r.slot is not None and grants[r.rid] > 0:
+                self._ensure_capacity(r, grants[r.rid])
+        active_reqs = [r for r in active_reqs
+                       if r.slot is not None and not r.is_done()]
+        if not active_reqs:
+            return finished
+        active = [r.slot for r in active_reqs]
+        by_slot = {r.slot: r for r in active_reqs}
+
+        # pure-decode steps run the width-1 program; any prefill surplus
+        # promotes the step to the chunk-width program (the only two shapes
+        # this engine ever compiles)
+        chunk = self.chunk_size if any(
+            grants[r.rid] > 1 for r in active_reqs) else 1
+        tokens = np.zeros((self.n_slots, chunk), np.int32)
+        q_lens = np.zeros((self.n_slots,), np.int32)
+        for r in active_reqs:
+            g = grants[r.rid]
+            tokens[r.slot, :g] = self._queue[r.slot][:g]
+            q_lens[r.slot] = g
+
+        if faults is None:
+            faults = self._no_faults
+        kv_det = np.zeros((self.n_slots,), np.int64)
+        kv_cor = np.zeros((self.n_slots,), np.int64)
+        efta_retries = 0
+        kv_retries = 0
+        attempt_faults = faults
+        det_acc = np.zeros((self.n_slots, 5), np.int64)
+        cor_acc = np.zeros((self.n_slots, 5), np.int64)
+        seen_bad: set = set()
+        tok_dev = jnp.asarray(tokens)
+        qlen_dev = jnp.asarray(q_lens)
+        while True:
+            next_tokens, rep, bad, new_state = self._step_fused(
+                self.params, tok_dev, self.pool.state,
+                jnp.asarray(self._bt), jnp.asarray(self._pos), qlen_dev,
+                attempt_faults, jnp.asarray(self._temps),
+                jnp.asarray(self._topks), jnp.asarray(self._seeds),
+                jnp.asarray(self._rids), jnp.asarray(self._counters))
+            det_acc += np.asarray(rep.detected, np.int64)
+            cor_acc += np.asarray(rep.corrected, np.int64)
+            bad_np = np.asarray(bad)
+            kv_hit_slots = [s for s in active if bad_np[s].any()]
+            if kv_hit_slots:
+                # resident corruption: the attempt read poisoned KV — repair
+                # the blocks, drop the attempt (nothing committed), retry.
+                # KV retries have their own (>= 1) budget independent of the
+                # EFTA one: committing an attempt derived from poisoned KV
+                # would bake the corruption into the refreshed block
+                # checksums and make it permanently undetectable.
+                kv_det[kv_hit_slots] += bad_np[kv_hit_slots].sum(-1)
+                bad_bids = {by_slot[s].block_ids[j] for s in kv_hit_slots
+                            for j in np.flatnonzero(bad_np[s])
+                            if j < len(by_slot[s].block_ids)}
+                self.paged_stats.kv_detected_blocks += \
+                    len(bad_bids - seen_bad)
+                seen_bad |= bad_bids
+                healed: set = set()
+                for s in kv_hit_slots:
+                    idxs = np.flatnonzero(bad_np[s])
+                    kv_cor[s] += idxs.size
+                    self._repair_blocks(by_slot[s], idxs, healed=healed)
+                if kv_retries < max(1, self.max_retries):
+                    kv_retries += 1
+                    attempt_faults = self._no_faults
+                    continue
+            if self._needs_retry_rows(rep, rows=active) and \
+                    efta_retries < self.max_retries:
+                efta_retries += 1
+                attempt_faults = self._no_faults
+                continue
+            break
+        retries = efta_retries + kv_retries
+
+        if kv_hit_slots:
+            # the FINAL attempt still read poisoned KV: see _step_gather —
+            # commit nothing, keep repairs, escalate if it persists.
+            per_request = {
+                r.rid: (np.concatenate([det_acc[r.slot],
+                                        kv_det[r.slot:r.slot + 1]]),
+                        np.concatenate([cor_acc[r.slot],
+                                        kv_cor[r.slot:r.slot + 1]]))
+                for r in active_reqs}
+            for r in active_reqs:
+                r.retries += retries
+            self.telemetry.observe_step(per_request, retries=retries)
+            self.stats.retries += retries
+            self._poisoned_steps += 1
+            if self._poisoned_steps > 3:
+                raise RuntimeError(
+                    "resident KV corruption persists across block re-prefills "
+                    "on consecutive steps — failing memory, not a transient "
+                    "SEU; cordon this host and restart elsewhere")
+            return finished
+
+        # commit
+        self._poisoned_steps = 0
+        self.pool.state = new_state
+        next_np = np.asarray(next_tokens)
+        per_request = {}
+        bs = self.block_size
+        for req in active_reqs:
+            slot = req.slot
+            g = int(q_lens[slot])
+            old_pos = int(self._pos[slot])
+            new_pos = old_pos + g
+            req.retries += retries
+            if g:
+                if g > 1:
+                    self.paged_stats.chunked_prefill_tokens += g
+                # the chunk rewrote these blocks: their generations move
+                # (and the prefix cache learns any block it completed)
+                for bi in range(old_pos // bs,
+                                min((new_pos - 1) // bs + 1,
+                                    len(req.block_ids))):
+                    self.pool.blocks.note_write(req.block_ids[bi])
+                del self._queue[slot][:g]
+                self._pos[slot] = new_pos
+                if not self._queue[slot]:
+                    # queue drained: this chunk's last row produced the next
+                    # token (first sample for a fresh prompt, the steady-
+                    # state decode sample otherwise)
+                    tok = int(next_np[slot])
+                    req.generated.append(tok)
+                    self._queue[slot] = [tok]
+                    self._counters[slot] = req.num_generated
+                    self.stats.tokens += 1
+                self._register_full_blocks(req, old_pos, new_pos)
+            per_request[req.rid] = (
+                np.concatenate([det_acc[slot], kv_det[slot:slot + 1]]),
+                np.concatenate([cor_acc[slot], kv_cor[slot:slot + 1]]))
+        self.telemetry.observe_step(per_request, retries=retries)
+        self.stats.steps += 1
+        self.stats.retries += retries
+        return finished
+
+    def _step_gather(self, faults: Optional[FaultSpec] = None
+                     ) -> List[Request]:
         decision = self.scheduler.step(self._try_admit, self._release_request)
         for req in decision.admitted:
             self._admit(req)
@@ -837,7 +1236,7 @@ class PagedServeEngine(ServeEngine):
         # commit
         self._poisoned_steps = 0
         self.pool.state = new_state
-        if self.kernel == "gather" and self.kv_verify == "stamped":
+        if self.kv_verify == "stamped":
             # stamp what the committed attempt verified, BEFORE noting the
             # tail appends below (a stamp covers the pre-write generation)
             for req in active_reqs:
@@ -852,6 +1251,7 @@ class PagedServeEngine(ServeEngine):
         for req in active_reqs:
             slot = req.slot
             tok = int(next_np[slot])
+            old_pos = int(self._pos[slot])
             req.generated.append(tok)
             req.retries += retries
             self._pending[slot] = tok
@@ -860,8 +1260,9 @@ class PagedServeEngine(ServeEngine):
             # generation moves, so the stamp invalidates (re-verified next
             # read under the stamped policy)
             self.pool.blocks.note_write(
-                req.block_ids[int(self._pos[slot]) // self.block_size])
+                req.block_ids[old_pos // self.block_size])
             self._pos[slot] += 1
+            self._register_full_blocks(req, old_pos, old_pos + 1)
             per_request[req.rid] = (
                 np.concatenate([det_acc[slot], kv_det[slot:slot + 1]]),
                 np.concatenate([cor_acc[slot], kv_cor[slot:slot + 1]]))
@@ -869,4 +1270,7 @@ class PagedServeEngine(ServeEngine):
         self.telemetry.observe_step(per_request, retries=retries)
         self.stats.steps += 1
         self.stats.retries += retries
+        if self.kv_verify == "stamped" and self.scrub_interval and \
+                self.stats.steps % self.scrub_interval == 0:
+            self._scrub_pass()
         return finished

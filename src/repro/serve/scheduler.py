@@ -69,10 +69,18 @@ class ScheduleDecision:
 
 
 class ContinuousBatchingScheduler:
-    """FCFS admission over a fixed slot budget."""
+    """FCFS admission over a fixed slot budget.
 
-    def __init__(self, n_slots: int):
+    ``chunk_budget`` caps the *prompt* tokens the unified chunked step may
+    process per iteration (None = unbounded): the paged engine's mixed
+    batches interleave prefill chunks with decodes, and without a budget a
+    long prompt monopolizes the step and head-of-line-blocks every decoding
+    request's next token. See :meth:`plan_chunks`.
+    """
+
+    def __init__(self, n_slots: int, chunk_budget: Optional[int] = None):
         self.n_slots = n_slots
+        self.chunk_budget = chunk_budget
         self.waiting: Deque[Request] = collections.deque()
         self.running: Dict[int, Request] = {}      # slot -> request
         self.finished: List[Request] = []
@@ -136,3 +144,30 @@ class ContinuousBatchingScheduler:
 
     def active_rows(self) -> Sequence[Request]:
         return [self.running[s] for s in sorted(self.running)]
+
+    def plan_chunks(self, demands: Sequence[tuple],
+                    chunk_size: int) -> Dict[int, int]:
+        """Split one unified step's token budget across the active requests.
+
+        ``demands``: ``(request, n_remaining)`` pairs — how many feed tokens
+        (prompt suffix + the pending decode token) each active request still
+        owes. Returns ``rid -> tokens granted this step``.
+
+        Fairness contract: every request with work is granted its first
+        token unconditionally — a decoding request's next token is never
+        starved by prefill traffic. Only the *surplus* (prompt chunk rows
+        beyond the first, up to ``chunk_size`` per request) draws from
+        ``chunk_budget``, handed out FCFS by admission order so an early
+        long prompt still finishes before a later one accelerates.
+        """
+        grants = {req.rid: min(1, rem) for req, rem in demands}
+        budget = self.chunk_budget
+        for req, rem in sorted(demands, key=lambda d: d[0].admit_order):
+            extra = min(rem, chunk_size) - grants[req.rid]
+            if extra <= 0:
+                continue
+            if budget is not None:
+                extra = min(extra, budget)
+                budget -= extra
+            grants[req.rid] += extra
+        return grants

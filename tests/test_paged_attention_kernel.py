@@ -246,6 +246,191 @@ def test_parity_property_ragged_gqa_fragmented(seed, bs, heads, fragment):
     assert not np.asarray(rep.bad_blocks).any()
 
 
+def _chunk_oracle(q, pool_k, pool_v, bt, kv_lens, q_lens, *, cfg,
+                  window=None):
+    """Row-by-row oracle for the multi-token chunk: chunk row c of request i
+    is exactly a single-token decode at kv_len = base + c + 1 (same blocks,
+    same accumulation order), so the unified kernel must reproduce the
+    sequential decode bit pattern the serve engines are pinned to."""
+    from repro.core.efta import efta_attention
+    from repro.kernels.ops import gather_block_kv
+
+    B, H, C, hd = q.shape
+    out = np.zeros((B, H, C, hd), np.float32)
+    for i in range(B):
+        _, kg = gather_block_kv(pool_k[None], bt[i])
+        _, vg = gather_block_kv(pool_v[None], bt[i])
+        base = int(kv_lens[i]) - int(q_lens[i])
+        for c in range(int(q_lens[i])):
+            qi = q[i, :, c][None, :, None, :]
+            o, rep = efta_attention(
+                qi, kg, vg, cfg=cfg, kv_len=base + c + 1, window=window,
+                causal=window is not None, q_offset=base + c)
+            assert int(np.sum(np.asarray(rep.detected))) == 0
+            out[i, :, c] = np.asarray(o)[0, :, 0, :]
+    return out
+
+
+@pytest.mark.quick
+def test_chunked_q_matches_per_row_decode_oracle():
+    """The unified multi-token contract at one standard shape: a C-row chunk
+    per request equals C sequential single-token decodes — including rows
+    whose chunk straddles a block edge — with zero detections and rows past
+    q_len emitting exactly zero."""
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from repro.core.efta import EFTAConfig
+    from repro.kernels.efta_paged import efta_paged_attention_pallas
+
+    B, mb, bs, hkv, grp, hd, cs = 3, 3, 16, 2, 2, 16, 8
+    cfg = EFTAConfig(mode="correct", stride=8, block_kv=bs)
+    _, pk, pv, kc, vc, bt, lens = _make_case(
+        7, B=B, mb=mb, bs=bs, hkv=hkv, grp=grp, hd=hd, cs=cs,
+        stale_scale=50.0)
+    rng = np.random.default_rng(2)
+    C = 7                                # 7 rows over 16-blocks: straddles
+    lens_np = np.asarray(lens)
+    q_lens = np.minimum(C - 1, lens_np).astype(np.int32)  # also pad a row
+    q = jnp.asarray(rng.standard_normal((B, hkv * grp, C, hd))
+                    .astype(np.float32))
+    rep = jax.jit(functools.partial(
+        efta_paged_attention_pallas, cfg=cfg, interpret=True))(
+        q, pk, pv, kc, vc, bt, lens, jnp.asarray(q_lens))
+    got = np.asarray(rep.out)
+    assert got.shape == (B, hkv * grp, C, hd)
+    oracle = _chunk_oracle(q, pk, pv, bt, lens_np, q_lens, cfg=cfg)
+    for i in range(B):
+        n = int(q_lens[i])
+        np.testing.assert_allclose(got[i, :, :n], oracle[i, :, :n],
+                                   atol=2e-5, rtol=2e-5)
+        assert not got[i, :, n:].any()   # padding rows are exactly zero
+    assert np.asarray(rep.detected).sum() == 0
+    assert not np.asarray(rep.bad_blocks).any()
+
+
+@given(st.integers(0, 10_000), st.sampled_from([8, 16]),
+       st.sampled_from([(1, 1), (2, 2), (1, 4)]),
+       st.sampled_from([3, 8, 13]))
+@settings(max_examples=6, deadline=None)
+def test_chunked_parity_property_matrix(seed, bs, heads, chunk):
+    """Property sweep of the unified kernel: chunk widths x block sizes x
+    MHA/GQA/MQA x ragged lengths x fragmented tables, chunk boundaries
+    landing mid-block — chunked == sequential single-token decode, zero
+    detections, loud stale rows never read."""
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from repro.core.efta import EFTAConfig
+    from repro.kernels.efta_paged import efta_paged_attention_pallas
+
+    hkv, grp = heads
+    cfg = EFTAConfig(mode="correct", stride=8, block_kv=bs)
+    _, pk, pv, kc, vc, bt, lens = _make_case(
+        seed, B=2, mb=3, bs=bs, hkv=hkv, grp=grp, hd=16, cs=min(8, bs),
+        stale_scale=50.0)
+    rng = np.random.default_rng(seed + 1)
+    lens_np = np.asarray(lens)
+    q_lens = np.minimum(
+        rng.integers(1, chunk + 1, size=lens_np.shape), lens_np
+    ).astype(np.int32)
+    q = jnp.asarray(rng.standard_normal(
+        (2, hkv * grp, chunk, 16)).astype(np.float32))
+    rep = jax.jit(functools.partial(
+        efta_paged_attention_pallas, cfg=cfg, interpret=True))(
+        q, pk, pv, kc, vc, bt, lens, jnp.asarray(q_lens))
+    got = np.asarray(rep.out)
+    oracle = _chunk_oracle(q, pk, pv, bt, lens_np, q_lens, cfg=cfg)
+    for i in range(2):
+        n = int(q_lens[i])
+        np.testing.assert_allclose(got[i, :, :n], oracle[i, :, :n],
+                                   atol=2e-5, rtol=2e-5)
+    assert np.asarray(rep.detected).sum() == 0
+    assert not np.asarray(rep.bad_blocks).any()
+
+
+def test_chunked_sliding_window_and_idle_rows():
+    """Chunk rows apply the sliding window at their own positions (not the
+    batch max), and a q_len == 0 request contributes nothing while its
+    resident blocks still stream through the in-loop verify."""
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from repro.core.efta import EFTAConfig
+    from repro.kernels.efta_paged import efta_paged_attention_pallas
+
+    cfg = EFTAConfig(mode="correct", stride=8, block_kv=16)
+    _, pk, pv, kc, vc, bt, lens = _make_case(
+        5, B=3, mb=3, bs=16, hkv=2, grp=2, hd=16, cs=8)
+    rng = np.random.default_rng(9)
+    C, win = 5, 9
+    lens_np = np.asarray(lens)
+    q_lens = np.minimum(C, lens_np).astype(np.int32)
+    q_lens[2] = 0                        # idle slot in the mixed batch
+    q = jnp.asarray(rng.standard_normal((3, 4, C, 16)).astype(np.float32))
+    rep = jax.jit(functools.partial(
+        efta_paged_attention_pallas, cfg=cfg, interpret=True))(
+        q, pk, pv, kc, vc, bt, lens, jnp.asarray(q_lens),
+        window=jnp.int32(win))
+    got = np.asarray(rep.out)
+    oracle = _chunk_oracle(q, pk, pv, bt, lens_np, q_lens, cfg=cfg,
+                           window=win)
+    for i in range(2):
+        n = int(q_lens[i])
+        np.testing.assert_allclose(got[i, :, :n], oracle[i, :, :n],
+                                   atol=2e-5, rtol=2e-5)
+    assert not got[2].any()              # idle request: all-zero output
+    assert np.asarray(rep.detected).sum() == 0
+
+    # the idle request's resident corruption is still caught in-loop
+    from repro.core.fault import flip_bit_at
+    blk = int(np.asarray(bt)[2, 0])
+    hkv_, bs_, hd_ = pk.shape[1], pk.shape[2], pk.shape[3]
+    flat = ((blk * hkv_ + 0) * bs_ + 0) * hd_ + 1
+    pk_bad = flip_bit_at(pk, jnp.int32(flat), jnp.int32(27))
+    rep2 = jax.jit(functools.partial(
+        efta_paged_attention_pallas, cfg=cfg, interpret=True))(
+        q, pk_bad, pv, kc, vc, bt, lens, jnp.asarray(q_lens))
+    assert np.asarray(rep2.bad_blocks)[2, 0]
+    assert np.asarray(rep2.detected)[2, 5] >= 1
+
+
+def test_chunked_compute_site_seus_corrected():
+    """Compute-site SEUs injected into a chunk row (tile row = group_row *
+    C + chunk_row): correct mode repairs in-kernel and reports the site,
+    exactly as on the decode path."""
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from repro.core.efta import EFTAConfig
+    from repro.core.fault import Site
+    from repro.kernels.efta_paged import efta_paged_attention_pallas
+
+    cfg = EFTAConfig(mode="correct", stride=8, block_kv=16)
+    _, pk, pv, kc, vc, bt, lens = _make_case(
+        11, B=2, mb=3, bs=16, hkv=2, grp=2, hd=16, cs=8)
+    rng = np.random.default_rng(4)
+    C = 6
+    lens_np = np.asarray(lens)
+    q_lens = np.minimum(C, lens_np).astype(np.int32)
+    q = jnp.asarray(rng.standard_normal((2, 4, C, 16)).astype(np.float32))
+    fn = jax.jit(lambda *a, fault: efta_paged_attention_pallas(
+        *a, cfg=cfg, fault=fault, interpret=True))
+    oracle = _chunk_oracle(q, pk, pv, bt, lens_np, q_lens, cfg=cfg)
+    for site in (Site.GEMM1, Site.EXP, Site.ROWSUM, Site.GEMM2):
+        # tile row 1*C + 2: group row 1, chunk row 2 (a valid row)
+        desc = jnp.asarray([int(site), 0, 1, 1, 1 * C + 2, 3, 27, 1],
+                           jnp.int32)
+        rep = fn(q, pk, pv, kc, vc, bt, lens, jnp.asarray(q_lens),
+                 fault=desc)
+        got = np.asarray(rep.out)
+        n = int(q_lens[1])
+        err = np.max(np.abs(got[1, :, :n] - oracle[1, :, :n]))
+        assert err < 1e-3, f"{site.name}: residual {err:.2e}"
+        assert np.asarray(rep.detected)[1].sum() >= 1, site.name
+        assert np.asarray(rep.bad_blocks).sum() == 0
+
+
 def test_sliding_window_masks_like_the_contiguous_path():
     """Per-request window masking (traced window scalar, as the per-layer
     global/local selection passes it)."""

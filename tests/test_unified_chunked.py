@@ -1,0 +1,319 @@
+"""Unified multi-token paged serving: the fused engine's mixed prefill +
+decode batched step (chunked prefill folded into decode), the scheduler's
+chunk budget, repair through the unified program, the compile-count
+regression guard, decode-filled prefix registration, and the stamped-policy
+background scrub.
+
+The acceptance bar (ISSUE 4): ``PagedServeEngine(kernel="fused")`` serves
+prefill, extend, repair and decode through the unified multi-token kernel
+with zero calls into the per-bucket ``_prefill``/``_extend`` jits; mixed
+prefill+decode batches are token-identical to the gather engine on the
+parity matrix; fault campaigns through the chunked path report zero silent
+corruptions; and the engine compiles at most two step programs regardless
+of prompt lengths.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.scheduler import ContinuousBatchingScheduler, Request
+
+
+# ---------------------------------------------------------------------------
+# scheduler chunk budget (no jax)
+# ---------------------------------------------------------------------------
+
+def _req(rid, admit_order):
+    r = Request(rid=rid, prompt=np.asarray([1], np.int32), max_new_tokens=1)
+    r.admit_order = admit_order
+    return r
+
+
+@pytest.mark.quick
+def test_plan_chunks_decodes_never_starve_and_budget_is_fcfs():
+    sched = ContinuousBatchingScheduler(4, chunk_budget=6)
+    a, b, c = _req(0, 0), _req(1, 1), _req(2, 2)
+    # a decodes (1 pending token), b and c are mid-prefill
+    grants = sched.plan_chunks([(a, 1), (b, 30), (c, 30)], chunk_size=8)
+    assert grants[a.rid] == 1            # decode granted outside the budget
+    # b (earlier admission) drains the budget before c sees any surplus
+    assert grants[b.rid] == 1 + 6
+    assert grants[c.rid] == 1
+    # unbounded budget: everyone gets a full chunk (capped at chunk_size)
+    sched.chunk_budget = None
+    grants = sched.plan_chunks([(a, 1), (b, 30), (c, 5)], chunk_size=8)
+    assert grants == {a.rid: 1, b.rid: 8, c.rid: 5}
+
+
+@pytest.mark.quick
+def test_plan_chunks_zero_remaining_gets_zero():
+    sched = ContinuousBatchingScheduler(2, chunk_budget=None)
+    a, b = _req(0, 0), _req(1, 1)
+    grants = sched.plan_chunks([(a, 0), (b, 3)], chunk_size=4)
+    assert grants == {a.rid: 0, b.rid: 3}
+
+
+# ---------------------------------------------------------------------------
+# engine level (jax; gpt2-smoke)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("gpt2-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    return cfg, model, params, rng
+
+
+def _paged(model, params, **kw):
+    from repro.serve import PagedServeEngine
+    kw.setdefault("n_slots", 3)
+    kw.setdefault("cache_len", 48)
+    kw.setdefault("block_size", 16)
+    return PagedServeEngine(model, params, **kw)
+
+
+def _forbid_bucketed_paths(eng):
+    """The acceptance criterion: the unified engine must never touch the
+    per-bucket prefill/extend jits — prefill, extend, repair and decode all
+    go through the one multi-token fused program."""
+    def boom(*a, **k):
+        raise AssertionError("unified engine called a bucketed "
+                             "prefill/extend jit")
+    eng._prefill = boom
+    eng._extend = boom
+    eng._gather_ctx = boom
+    eng._scatter = boom
+
+
+def test_unified_mixed_batches_token_identical_to_gather(setup):
+    """Parity matrix: ragged prompt lengths straddling chunk and block
+    edges, several chunk widths, more requests than slots (admission mixes
+    prefill chunks into live decode batches) — the unified fused engine must
+    emit exactly the gather engine's tokens, with zero bucketed-jit calls
+    and zero false positives."""
+    cfg, model, params, rng = setup
+    lengths = [3, 9, 16, 17, 25, 31, 40]
+    steps = [5, 4, 7, 3, 6, 4, 5]
+    prompts = [rng.integers(0, cfg.vocab_size, (t,)).astype(np.int32)
+               for t in lengths]
+    ref_eng = _paged(model, params)                 # gather baseline (PR 3)
+    for p, s in zip(prompts, steps):
+        ref_eng.submit(p, max_new_tokens=s)
+    ref = ref_eng.run()
+
+    for chunk in (16, 32):
+        eng = _paged(model, params, kernel="fused", chunk_size=chunk)
+        _forbid_bucketed_paths(eng)
+        for p, s in zip(prompts, steps):
+            eng.submit(p, max_new_tokens=s)
+        got = eng.run()
+        assert set(got) == set(ref)
+        for rid in ref:
+            np.testing.assert_array_equal(
+                got[rid], ref[rid], err_msg=f"chunk={chunk} rid={rid}")
+        assert eng.paged_stats.chunked_prefill_tokens > 0
+        assert eng.paged_stats.kv_detected_blocks == 0
+        assert eng.stats.steps < sum(steps) + len(lengths)  # actually mixed
+
+
+def test_unified_engine_compiles_at_most_two_step_programs(setup):
+    """The compile-count regression guard: any mix of prompt lengths runs
+    through exactly two compiled programs (chunk width + decode width) —
+    the one-per-prompt-bucket scheme this PR retires would compile one per
+    distinct padded length."""
+    cfg, model, params, rng = setup
+    eng = _paged(model, params, kernel="fused", chunk_size=16)
+    for t in (3, 5, 9, 14, 17, 23, 26, 31, 40, 44):
+        eng.submit(rng.integers(0, cfg.vocab_size, (t,)).astype(np.int32),
+                   max_new_tokens=3)
+    eng.run()
+    n_programs = eng._step_fused._cache_size()
+    assert n_programs <= 2, \
+        f"unified step compiled {n_programs} programs for 10 prompt lengths"
+
+
+def test_chunk_budget_prevents_head_of_line_blocking(setup):
+    """A long prompt prefilling under a small chunk budget must not stall a
+    decoding request: the decode gets its token every step while the prompt
+    trickles in, so the short request finishes before the long one even
+    starts generating."""
+    cfg, model, params, rng = setup
+    short = rng.integers(0, cfg.vocab_size, (4,)).astype(np.int32)
+    long_p = rng.integers(0, cfg.vocab_size, (40,)).astype(np.int32)
+
+    eng = _paged(model, params, n_slots=2, kernel="fused",
+                 chunk_size=16, chunk_budget=4)
+    r_short = eng.submit(short, max_new_tokens=6)
+    eng.step()                                   # short admitted, decoding
+    r_long = eng.submit(long_p, max_new_tokens=2)
+    short_req = next(r for r in eng.scheduler.active_rows()
+                     if r.rid == r_short)
+    gen_trace = []
+    while not short_req.is_done():
+        eng.step()
+        gen_trace.append(short_req.num_generated)
+    long_req = next((r for r in eng.scheduler.active_rows()
+                     if r.rid == r_long), None)
+    # decode advanced every single step despite the 40-token prompt...
+    assert gen_trace == list(range(gen_trace[0], gen_trace[0] + len(gen_trace)))
+    # ...which is still mid-prefill under its 4-token/step budget
+    assert long_req is not None and long_req.num_generated == 0
+    outs = eng.run()
+
+    # and the budgeted interleaving changed nothing about the tokens
+    ref_eng = _paged(model, params, n_slots=2, kernel="fused")
+    ra = ref_eng.submit(short, max_new_tokens=6)
+    rb = ref_eng.submit(long_p, max_new_tokens=2)
+    ref = ref_eng.run()
+    np.testing.assert_array_equal(outs[r_short], ref[ra])
+    np.testing.assert_array_equal(outs[r_long], ref[rb])
+
+
+def test_unified_repair_reuses_the_step_program(setup):
+    """Satellite: block repair routes through the SAME unified chunked
+    program as prefill/decode — detect -> repair -> token-identical without
+    compiling anything new, even when the repair happens under pool
+    pressure mid-generation."""
+    cfg, model, params, rng = setup
+    prompt = rng.integers(0, cfg.vocab_size, (20,)).astype(np.int32)
+    clean = _paged(model, params, n_slots=2, kernel="fused", chunk_size=16)
+    rc = clean.submit(prompt, max_new_tokens=8)
+    ref = clean.run()[rc]
+
+    eng = _paged(model, params, n_slots=2, kernel="fused", chunk_size=16)
+    _forbid_bucketed_paths(eng)
+    rid = eng.submit(prompt, max_new_tokens=8)
+    eng.step()          # prefill chunk 1 (chunk-width program compiles)
+    eng.step()          # prefill chunk 2 + first sample
+    eng.step()          # decode (width-1 program compiles)
+    programs_before = eng._step_fused._cache_size()
+    assert programs_before == 2
+    req = list(eng.scheduler.active_rows())[0]
+    eng.inject_kv_fault(layer=1, block=req.block_ids[0], head=0, row=3,
+                        col=5, bit=27, into="v")
+    out = eng.run()[rid]
+    np.testing.assert_array_equal(out, ref)
+    assert eng.paged_stats.kv_detected_blocks == 1
+    assert eng.paged_stats.kv_repaired_blocks == 1
+    assert eng._step_fused._cache_size() == programs_before
+
+
+def test_kv_campaign_through_chunked_prefill(setup):
+    """Site.KV SEU campaign with prompts longer than the chunk width, so
+    flips strike mid-prefill state and the detect -> repair -> token-
+    identical contract is exercised through the chunked kernel path."""
+    from repro.core import run_kv_campaign
+    r = run_kv_campaign(n_trials=3, seed=11, kernel="fused", n_requests=2,
+                        cache_len=64, max_prompt=40, gen=4, chunk_size=16)
+    assert r.n_trials == 3
+    assert r.detected == 3, r.format_table()
+    assert r.undetected == 0
+    assert r.repaired_blocks >= 3
+    assert r.mismatched_requests == 0, r.format_table()
+
+
+def test_compute_site_seu_during_chunked_prefill(setup):
+    """An EFTA compute-site SEU striking a step whose batch is prefilling a
+    chunk: detected by the in-kernel scheme, retried/corrected, and the
+    final tokens equal a clean run's."""
+    from repro.core import FaultSpec, Site
+    from repro.serve import batch_faults
+    cfg, model, params, rng = setup
+    prompt = rng.integers(0, cfg.vocab_size, (40,)).astype(np.int32)
+
+    clean = _paged(model, params, n_slots=2, kernel="fused", chunk_size=16)
+    rc = clean.submit(prompt, max_new_tokens=4)
+    ref = clean.run()[rc]
+
+    eng = _paged(model, params, n_slots=2, kernel="fused", chunk_size=16)
+    rid = eng.submit(prompt, max_new_tokens=4)
+    # steps 0-2 are chunked prefill (40 tokens / 16-chunk); strike two
+    faults = {0: batch_faults(2, {0: FaultSpec.single(
+                  Site.GEMM2, block=0, head=1, row=0, col=3, bit=27)}),
+              1: batch_faults(2, {0: FaultSpec.single(
+                  Site.GEMM1, block=1, head=2, row=0, col=5, bit=26)})}
+    out = eng.run(faults_by_step=faults)[rid]
+    np.testing.assert_array_equal(out, ref)
+    st = eng.telemetry.requests[rid]
+    assert sum(st.detected[:5]) >= 1
+    assert st.detected[5] == 0          # compute faults, not memory faults
+
+
+@pytest.mark.parametrize("kernel", ["gather", "fused"])
+def test_decode_filled_blocks_register_in_prefix_cache(setup, kernel):
+    """Satellite: blocks completed by *decode* join the token-hash chain, so
+    resampling the same prompt + continuation prefix (n-best / self-
+    consistency) hits cache past the prompt. Before this PR only prompt
+    blocks registered and the continuation re-prefilled every time."""
+    cfg, model, params, rng = setup
+    prompt = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+    eng = _paged(model, params, n_slots=2, cache_len=64, num_blocks=16,
+                 kernel=kernel)
+    r0 = eng.submit(prompt, max_new_tokens=20)
+    first = eng.run()[r0]
+
+    # n-best continuation: a follow-up request whose prompt replays the
+    # original prompt plus the generated continuation
+    p2 = np.concatenate([prompt, first]).astype(np.int32)
+    hit_before = eng.pool.prefix.stats.hit_tokens
+    r1 = eng.submit(p2, max_new_tokens=2)
+    eng.run()
+    hits = eng.pool.prefix.stats.hit_tokens - hit_before
+    # 36 resident tokens -> blocks 0 (prompt) and 1 (decode-filled) both hit
+    assert hits >= 32, f"continuation prefix only hit {hits} tokens"
+
+
+def test_scrub_bounds_stamped_deferred_detection(setup):
+    """Satellite: the background scrub closes the stamped policy's deferred-
+    detection window. The exact scenario the regression test pins as missed
+    (a flip in a verified-and-untouched block) is caught by the next scrub
+    pass and repaired, instead of hiding until the block's next write."""
+    cfg, model, params, rng = setup
+    prompt = rng.integers(0, cfg.vocab_size, (20,)).astype(np.int32)
+
+    def poisoned(**kw):
+        eng = _paged(model, params, n_slots=2, kv_verify="stamped", **kw)
+        eng.submit(prompt, max_new_tokens=4)
+        eng.step()
+        req = list(eng.scheduler.active_rows())[0]
+        # block 0 is non-tail (pos = 20 > block_size): stamped-verified,
+        # skipped by the read-time selector
+        eng.inject_kv_fault(layer=0, block=req.block_ids[0], head=0,
+                            row=2, col=3, bit=27, into="k")
+        eng.run()
+        return eng
+
+    missed = poisoned()                              # the pinned tradeoff
+    assert missed.paged_stats.kv_detected_blocks == 0
+
+    eng = poisoned(scrub_interval=1, scrub_batch=4)  # scrub bounds it
+    assert eng.paged_stats.kv_scrubbed_blocks > 0
+    assert eng.paged_stats.kv_detected_blocks == 1
+    assert eng.paged_stats.kv_repaired_blocks >= 1
+
+
+@pytest.mark.quick
+def test_unified_quick_smoke(setup):
+    """Quick-tier guard: one mixed batch (a prefilling prompt + a decoding
+    request), zero bucketed-jit calls, tokens identical to gather."""
+    cfg, model, params, rng = setup
+    pa = rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab_size, (26,)).astype(np.int32)
+    ref_eng = _paged(model, params, n_slots=2)
+    fused = _paged(model, params, n_slots=2, kernel="fused", chunk_size=16)
+    _forbid_bucketed_paths(fused)
+    ids = {}
+    for eng, tag in ((ref_eng, "ref"), (fused, "fused")):
+        ids[tag] = [eng.submit(pa, max_new_tokens=4),
+                    eng.submit(pb, max_new_tokens=3)]
+    ref = ref_eng.run()
+    got = fused.run()
+    for (ra, rb), (ga, gb) in [(ids["ref"], ids["fused"])]:
+        np.testing.assert_array_equal(got[ga], ref[ra])
+        np.testing.assert_array_equal(got[gb], ref[rb])
+    assert fused.paged_stats.chunked_prefill_tokens > 0
