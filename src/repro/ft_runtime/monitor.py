@@ -72,13 +72,34 @@ class RequestFaultStats:
     steps: int = 0
     # ``kv`` is fed by whichever verification caught the flip: the gather
     # backend's fold over gathered blocks, the fused kernel's in-loop verify
-    # (report-tile word 6), or the append-time tail check — all three share
-    # one fold/threshold definition in ``repro.core.checksum``.
+    # (report-tile word 6), the append-time tail check, or the speculative
+    # rollback's pre-restamp guard — all share one fold/threshold definition
+    # in ``repro.core.checksum``.
     detected: list = dataclasses.field(
         default_factory=lambda: [0] * N_FAULT_SITES)
     corrected: list = dataclasses.field(
         default_factory=lambda: [0] * N_FAULT_SITES)
     retries: int = 0
+    # ``detected`` aggregates across every attempt of a step (a detection on
+    # the first attempt AND on its retry counts twice). ``redetected``
+    # splits out the retry attempts' detections, so campaign assertions can
+    # distinguish "detected once, then retried clean" (detected == 1,
+    # retries == 1, redetected == 0) from "detected twice" (redetected > 0
+    # — the fault survived or restruck the re-execution).
+    redetected: list = dataclasses.field(
+        default_factory=lambda: [0] * N_FAULT_SITES)
+    # speculative decoding: the *draft* pass is EFTA-protected too — its
+    # detections/corrections are tracked separately from the target pass
+    # (the ``detected``/``corrected`` vectors above), so a campaign can
+    # attribute a strike to the pass it hit.
+    draft_detected: list = dataclasses.field(
+        default_factory=lambda: [0] * N_FAULT_SITES)
+    draft_corrected: list = dataclasses.field(
+        default_factory=lambda: [0] * N_FAULT_SITES)
+    draft_retries: int = 0
+    # acceptance telemetry: drafts this request scored vs drafts committed
+    draft_proposed: int = 0
+    draft_accepted: int = 0
 
     @property
     def total_detected(self) -> int:
@@ -87,6 +108,13 @@ class RequestFaultStats:
     @property
     def total_corrected(self) -> int:
         return sum(self.corrected)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of this request's scored draft tokens that the target
+        accepted (0.0 when the request never speculated)."""
+        return 0.0 if not self.draft_proposed \
+            else self.draft_accepted / self.draft_proposed
 
     @property
     def detection_rate(self) -> float:
@@ -124,7 +152,9 @@ class ServeFaultTelemetry:
 
     def observe_step(self, per_request: dict, *, retries: int = 0) -> str:
         step_detected = 0
-        for rid, (det, cor) in per_request.items():
+        for rid, entry in per_request.items():
+            det, cor = entry[0], entry[1]
+            redet = entry[2] if len(entry) > 2 else None
             st = self._stats(rid)
             st.steps += 1
             st.retries += retries
@@ -132,6 +162,9 @@ class ServeFaultTelemetry:
             cor = _pad_sites(cor)
             st.detected = [a + b for a, b in zip(st.detected, det)]
             st.corrected = [a + b for a, b in zip(st.corrected, cor)]
+            if redet is not None:
+                redet = _pad_sites(redet)
+                st.redetected = [a + b for a, b in zip(st.redetected, redet)]
             if sum(det):
                 st._steps_with_detection += 1
             step_detected += sum(det)
@@ -139,6 +172,36 @@ class ServeFaultTelemetry:
                               "detected": step_detected,
                               "retries": retries})
         self.status = self.monitor.observe(step_detected)
+        return self.status
+
+    def observe_draft(self, rid: int, det, cor, *, retries: int = 0,
+                      proposed: int = 0, accepted: int = 0) -> str:
+        """Record one request's *draft-pass* activity: the EFTA report of
+        its draft-model forward (if any) plus the propose/accept tally of
+        the step. Draft detections feed the same sustained-fault escalation
+        as target-pass detections — a failing chip corrupts both."""
+        st = self._stats(rid)
+        det = _pad_sites(det)
+        cor = _pad_sites(cor)
+        st.draft_detected = [a + b for a, b in zip(st.draft_detected, det)]
+        st.draft_corrected = [a + b for a, b in zip(st.draft_corrected, cor)]
+        st.draft_retries += retries
+        st.draft_proposed += proposed
+        st.draft_accepted += accepted
+        if sum(det) or retries:
+            self.step_log.append({"requests": 1, "detected": sum(det),
+                                  "retries": retries, "draft": True})
+            self.status = self.monitor.observe(sum(det))
+        return self.status
+
+    def observe_scrub(self, detected: int) -> str:
+        """Record a background-scrub detection with no owning request (a
+        parked prefix-cache block rotted while unmapped). Counts toward the
+        step log and the sustained-fault escalation like any other
+        resident-state detection."""
+        self.step_log.append({"requests": 0, "detected": int(detected),
+                              "retries": 0, "scrub": True})
+        self.status = self.monitor.observe(int(detected))
         return self.status
 
     def observe_prefill(self, rid: int, det, cor, *, retries: int = 0) -> str:

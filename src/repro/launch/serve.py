@@ -102,6 +102,21 @@ def main():
                          "verified live blocks every N committed steps "
                          "(bounds the stamped policy's deferred-detection "
                          "window; 0 = off)")
+    ap.add_argument("--speculate", choices=("off", "ngram", "draft"),
+                    default="off",
+                    help="speculative decoding through the propose→score→"
+                         "accept step (implies --paged): 'ngram' self-drafts "
+                         "by prompt lookup, 'draft' decodes a small draft "
+                         "model (--draft-model) through the same EFTA path; "
+                         "the unified chunk scores all K drafts in one "
+                         "protected launch and rejected rows roll back with "
+                         "checksum-verified truncation")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="max draft tokens proposed per request per step")
+    ap.add_argument("--draft-model", default="",
+                    help="arch name of the draft model for --speculate "
+                         "draft (defaults to the serving arch — pure "
+                         "self-drafting, acceptance ~1)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="tokens of system prompt shared by every request "
                          "(exercises the prefix cache)")
@@ -120,6 +135,9 @@ def main():
                      "chunks its prefill at admission instead)")
         args.paged = True
         args.kernel = "fused"
+    if args.speculate != "off":
+        args.paged = True              # the propose→score→accept step is
+        #                                the paged engine's unified contract
     if not args.paged and (args.kernel is not None
                            or args.kv_verify != "always"
                            or args.chunk_size or args.chunk_budget
@@ -143,6 +161,18 @@ def main():
         return
 
     if args.paged:
+        draft_model = draft_params = None
+        if args.speculate == "draft":
+            dcfg = get_config(args.draft_model or args.arch)
+            if args.ft_mode:
+                dcfg = dataclasses.replace(
+                    dcfg, ft=dataclasses.replace(dcfg.ft, mode=args.ft_mode))
+            draft_model = build_model(dcfg)
+            if not args.draft_model or args.draft_model == args.arch:
+                draft_params = params      # self-drafting: share weights
+            else:
+                draft_params = draft_model.init(
+                    jax.random.PRNGKey(args.seed + 1))
         eng = PagedServeEngine(model, params, n_slots=args.slots,
                                cache_len=args.cache_len or None,
                                block_size=args.block_size,
@@ -150,7 +180,11 @@ def main():
                                kernel=args.kernel, kv_verify=args.kv_verify,
                                chunk_size=args.chunk_size or None,
                                chunk_budget=args.chunk_budget or None,
-                               scrub_interval=args.scrub_interval)
+                               scrub_interval=args.scrub_interval,
+                               speculate=args.speculate,
+                               draft_len=args.draft_len,
+                               draft_model=draft_model,
+                               draft_params=draft_params)
     else:
         eng = ServeEngine(model, params, n_slots=args.slots,
                           cache_len=args.cache_len or None)
@@ -217,6 +251,15 @@ def main():
                  ps.kv_repaired_blocks, ps.kv_scrubbed_blocks,
                  ps.preemptions, eng.pool.blocks.stats.evictions,
                  ps.chunked_prefill_tokens)
+        if args.speculate != "off":
+            log.info("speculation (%s): acceptance=%.2f (%d/%d drafts), "
+                     "spec steps=%d, tokens/step=%.2f, rolled-back rows=%d, "
+                     "rollback-guard detections=%d",
+                     args.speculate, eng.acceptance_rate,
+                     ps.spec_accepted_tokens, ps.spec_proposed_tokens,
+                     ps.spec_steps,
+                     eng.stats.tokens / max(eng.stats.steps, 1),
+                     ps.spec_rolled_back_rows, ps.rollback_detected_blocks)
     for rid in sorted(outs):
         st = eng.telemetry.requests.get(rid)
         log.info("request %d: %d tokens, detected=%d corrected=%d retries=%d",

@@ -162,6 +162,25 @@ class Model:
                                             fault=fault)
         return _last_logits(logits, lengths), rep, new_cache
 
+    def score(self, params, tokens, cache, *, mesh=None, fault=None):
+        """:meth:`extend` returning the FULL per-row logits ``(B, S, V)``.
+
+        This is the scoring half of the serve engine's propose→score→accept
+        contract: the chunk rows are a pending token plus K speculative draft
+        tokens, and the acceptance stage needs the target distribution at
+        *every* row (row ``j`` conditions on the cached context plus rows
+        ``0..j``), not just the last one. Same unified chunked computation as
+        :meth:`extend` — ring caches and :class:`PagedKVCache` block pools
+        both dispatch through ``forward(mode="decode")`` — so scoring K
+        drafts is one EFTA-protected launch, bit-identical per row to
+        feeding the same tokens one step at a time.
+        """
+        batch = {"tokens": tokens}
+        logits, rep, _, new_cache = forward(params, self.cfg, batch, mesh=mesh,
+                                            cache=cache, mode="decode",
+                                            fault=fault)
+        return logits, rep, new_cache
+
 
 def build_model(cfg: ModelConfig) -> Model:
     return Model(cfg)

@@ -183,6 +183,81 @@ def _paged_chunk(q, k, v, cache: PagedKVCache, *, cfg: EFTAConfig, window,
     return rep.out, report, new_cache
 
 
+def paged_rollback(k, v, kc1, kc2, vc1, vc2, bt, keep_pos, old_pos, *,
+                   check_stride: int, threshold: float, max_span: int):
+    """Fault-tolerant KV rollback: truncate rejected speculative rows.
+
+    The propose→score→accept step appends every scored chunk row's K/V into
+    the paged block pool *before* the acceptance verdict exists (append-
+    before-attend). When the target rejects a draft suffix, rows
+    ``keep_pos[b] .. old_pos[b] - 1`` of request ``b`` are junk that must not
+    survive: this zeroes them (``kv_len`` truncation — matching the
+    zero-padded-partial-block convention of the scatter path, so pool state
+    is deterministic) and *re-generates* the touched tail blocks' checksums
+    over the truncated content.
+
+    Laundering guard: re-stamping a checksum from current content over a
+    block that was corrupted between the scoring step's verify and this
+    rollback would make the corruption permanently undetectable. So every
+    touched block is first re-verified against its **pre-rollback**
+    checksums; the returned ``bad`` plane (B, table_len) flags mismatches
+    and the engine must re-prefill those blocks (the restamped checksums are
+    then overwritten by the repair) — detection is never lost to a rollback.
+
+    ``k``/``v``: (L, num_blocks+1, Hkv, bs, hd) pool arrays (row 0 = null
+    block); ``kc1..vc2`` their resident checksum planes; ``bt`` (B, mb)
+    block tables; ``keep_pos``/``old_pos`` (B,) with ``keep_pos <= old_pos``
+    and ``old_pos - keep_pos <= max_span`` (the chunk width — static, so one
+    compiled program serves every acceptance outcome). Slots with
+    ``keep_pos == old_pos`` are untouched. Touched blocks are private tail
+    blocks (shared blocks were COW-split before the speculative append), so
+    no two slots roll back the same block.
+
+    Returns ``(k, v, kc1, kc2, vc1, vc2, bad)``.
+    """
+    bs = k.shape[3]
+    mb = bt.shape[1]
+    cs = kc1.shape[3]
+    nt = (max_span + bs - 2) // bs + 1     # max blocks a rollback can touch
+    j0 = keep_pos // bs
+    jt = j0[:, None] + jnp.arange(nt, dtype=jnp.int32)[None, :]    # (B, nt)
+    last = (jnp.maximum(old_pos, keep_pos + 1) - 1) // bs
+    touched = (jt <= last[:, None]) & (old_pos > keep_pos)[:, None]
+    tid = jnp.where(
+        touched, jnp.take_along_axis(bt, jnp.clip(jt, 0, mb - 1), axis=1), 0)
+
+    # -- laundering guard: verify against the PRE-rollback checksums first
+    bad_k, _ = cks.verify_block(
+        k[:, tid], cks.Checksums(kc1[:, tid], kc2[:, tid]), cs,
+        threshold=threshold)
+    bad_v, _ = cks.verify_block(
+        v[:, tid], cks.Checksums(vc1[:, tid], vc2[:, tid]), cs,
+        threshold=threshold)
+    bad_t = jnp.any(bad_k | bad_v, axis=(0, -1)) & (tid > 0)       # (B, nt)
+    b_idx = jnp.arange(bt.shape[0])[:, None]
+    bad = jnp.zeros(bt.shape, jnp.int32).at[
+        b_idx, jnp.clip(jt, 0, mb - 1)].max(bad_t.astype(jnp.int32))
+
+    # -- truncate: zero exactly the rejected rows of the touched blocks
+    rows_abs = jt[:, :, None] * bs + jnp.arange(bs,
+                                                dtype=jnp.int32)[None, None, :]
+    kill = ((rows_abs >= keep_pos[:, None, None])
+            & (rows_abs < old_pos[:, None, None])
+            & touched[:, :, None])                                 # (B, nt, bs)
+    kmask = kill[None, :, :, None, :, None]
+    kb = jnp.where(kmask, 0.0, k[:, tid]).astype(k.dtype)
+    vb = jnp.where(kmask, 0.0, v[:, tid]).astype(v.dtype)
+    new_k = k.at[:, tid].set(kb)
+    new_v = v.at[:, tid].set(vb)
+
+    # -- re-stamp the touched blocks' checksums over the truncated content
+    ck = cks.encode_kv(kb, check_stride)
+    cv = cks.encode_kv(vb, check_stride)
+    return (new_k, new_v,
+            kc1.at[:, tid].set(ck.c1), kc2.at[:, tid].set(ck.c2),
+            vc1.at[:, tid].set(cv.c1), vc2.at[:, tid].set(cv.c2), bad)
+
+
 def _split_heads(x, n_heads, head_dim):
     b, s, _ = x.shape
     return x.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)

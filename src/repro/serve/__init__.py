@@ -1,8 +1,11 @@
 from repro.serve.cache import KVCachePool
 from repro.serve.blocks import BlockPool, PrefixCache
+from repro.serve.draft import (DraftModelProposer, NGramProposer,
+                               build_proposer)
 from repro.serve.engine import EngineStats, ServeEngine, batch_faults
 from repro.serve.paged import (PagedCacheStats, PagedKVPool, PagedServeEngine)
-from repro.serve.sampling import SamplingParams, sample_tokens
+from repro.serve.sampling import (SamplingParams, sample_tokens,
+                                  speculative_accept)
 from repro.serve.scheduler import (ContinuousBatchingScheduler, Request,
                                    RequestState)
 from repro.serve.step import greedy_generate, make_decode_step, make_prefill_step

@@ -176,6 +176,28 @@ class BlockPool:
         m = self._meta.get(bid)
         return -1 if m is None else m.verified_at
 
+    # -- parked prefix-cache blocks (background scrub coverage) --------------
+    def parked_blocks(self) -> List[int]:
+        """Blocks parked in the prefix cache (ref == 0, content retained for
+        future hits). They appear in no live block table, so the read-time
+        verification never touches them — the background scrub draws from
+        this list after the live tables so a bit flip that lands while a
+        shared prefix is parked is caught *before* the next admission
+        gathers it."""
+        return list(self._evictable)
+
+    def discard_parked(self, bid: int) -> None:
+        """Drop a parked block whose content failed verification: forget its
+        prefix-cache registration (``on_evict``) and return it to the free
+        list. Detection-before-use repair for cache-only state — the next
+        admission simply misses and re-prefills fresh blocks."""
+        if bid not in self._evictable:
+            raise ValueError(f"block {bid} is not parked")
+        del self._evictable[bid]
+        meta = self._meta.pop(bid)
+        self._free.append(bid)
+        self.on_evict(bid, meta.chain_hash)
+
     # -- sharing ------------------------------------------------------------
     def register(self, bid: int, chain_hash: int) -> None:
         """Mark a (full, immutable) block as prefix-cache content."""

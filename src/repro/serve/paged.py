@@ -62,11 +62,25 @@ request's generation fills a block, the block joins the token-hash chain, so
 n-best / self-consistency resampling of the same prompt + continuation
 prefix hits cache instead of re-prefilling (appends to a registered block
 copy-on-write-split as before — full blocks are immutable).
+
+Since PR 5 the step is the general **propose→score→accept** contract
+(speculative decoding): each slot proposes K candidate tokens
+(``repro.serve.draft`` — n-gram prompt lookup or an EFTA-protected draft
+model; K = 0 degenerates to plain decode, a prompt suffix to prefill), the
+unified chunked program scores pending + drafts in one protected launch
+returning per-row logits, and the acceptance stage
+(``repro.serve.sampling.speculative_accept``) commits the longest valid
+prefix. Rejected rows already appended to blocks are rewound by
+fault-tolerant ``kv_len`` truncation (``models.attention.paged_rollback``):
+touched tail blocks re-verify against their PRE-rollback checksums before
+their checksums are re-generated over the truncated content, so corruption
+landing mid-rollback is detected and repaired, never laundered into a
+consistent state.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -77,11 +91,13 @@ from repro.core.fault import FaultSpec, flip_bit_at
 from repro.kernels.efta_paged import paged_fault_descriptor
 from repro.kernels.ops import gather_block_kv
 from repro.models.api import Model
-from repro.models.attention import KVCache, PagedKVCache
+from repro.models.attention import KVCache, PagedKVCache, paged_rollback
 from repro.serve.blocks import NULL_BLOCK, BlockPool, PrefixCache
 from repro.serve.cache import add_unit_batch, drop_unit_batch
+from repro.serve.draft import build_proposer
 from repro.serve.engine import ServeEngine
-from repro.serve.sampling import request_key, sample_tokens
+from repro.serve.sampling import (request_key, sample_tokens,
+                                  speculative_accept)
 from repro.serve.scheduler import Request
 
 
@@ -106,6 +122,13 @@ class PagedCacheStats:
     kv_scrubbed_blocks: int = 0    # blocks re-folded by the background scrub
     preemptions: int = 0
     chunked_prefill_tokens: int = 0  # prompt tokens fed through mixed steps
+    # speculative decoding (propose→score→accept)
+    spec_steps: int = 0            # committed steps that scored >= 1 draft
+    spec_proposed_tokens: int = 0  # draft tokens scored by the target
+    spec_accepted_tokens: int = 0  # draft tokens committed
+    spec_rolled_back_rows: int = 0  # rejected KV rows truncated by rollback
+    rollback_detected_blocks: int = 0  # corruption caught by the rollback
+    #                                    pre-restamp (anti-laundering) guard
 
 
 class PagedKVPool:
@@ -185,6 +208,16 @@ class PagedServeEngine(ServeEngine):
     deferred-detection window. The fused backend reads its checksum
     threshold from ``repro.core.checksum.kv_block_threshold`` — a custom
     ``check_threshold`` only steers the gather-side verification.
+
+    ``speculate`` turns the step into the full propose→score→accept
+    contract: ``"ngram"`` self-drafts by prompt lookup, ``"draft"`` decodes
+    a small draft model (``draft_model``/``draft_params``) through the same
+    EFTA path; up to ``draft_len`` draft rows per slot ride the scored
+    chunk (padded to the chunk width — the ≤ 2-compiled-programs invariant
+    holds with speculation on), the acceptance stage commits the longest
+    valid prefix, and rejected rows roll back from the paged blocks with
+    checksum-verified truncation. Greedy speculation is token-identical to
+    ``speculate="off"``.
     """
 
     def __init__(self, model: Model, params, *, n_slots: int = 8,
@@ -196,7 +229,9 @@ class PagedServeEngine(ServeEngine):
                  chunk_size: Optional[int] = None,
                  chunk_budget: Optional[int] = None,
                  kernel: str = "gather", kv_verify: str = "always",
-                 scrub_interval: int = 0, scrub_batch: int = 4):
+                 scrub_interval: int = 0, scrub_batch: int = 4,
+                 speculate: str = "off", draft_len: int = 4,
+                 draft_model: Optional[Model] = None, draft_params=None):
         if block_size < 1:
             raise ValueError("block_size must be >= 1")
         if kernel not in ("gather", "fused"):
@@ -231,6 +266,31 @@ class PagedServeEngine(ServeEngine):
                 "so a background scrub would never run there")
         self.scrub_interval = scrub_interval
         self.scrub_batch = scrub_batch
+        if speculate not in ("off", "ngram", "draft"):
+            raise ValueError(f"speculate must be 'off', 'ngram' or 'draft'; "
+                             f"got {speculate!r}")
+        self.speculate = speculate
+        if speculate == "off":
+            self.draft_len = 0
+            self._proposer = None
+        else:
+            if draft_len < 1:
+                raise ValueError("speculation needs draft_len >= 1")
+            # the scored chunk is the pending token + K drafts, padded to
+            # the chunk width (the ≤2-compiled-programs invariant)
+            self.draft_len = min(draft_len, self.chunk_size - 1)
+            if self.draft_len < 1:
+                raise ValueError(
+                    f"chunk_size ({self.chunk_size}) leaves no room for "
+                    f"draft rows; speculation needs chunk_size >= 2")
+            self._proposer = build_proposer(
+                speculate, n_slots=n_slots, cache_len=cl,
+                chunk_size=self.chunk_size, draft_model=draft_model,
+                draft_params=draft_params)
+        # fault-campaign hook: called after the scoring step committed and
+        # before the KV rollback runs — lets tests strike resident state
+        # mid-rollback and assert the pre-restamp guard catches it
+        self._pre_rollback_hook = None
         super().__init__(model, params, n_slots=n_slots, cache_len=cl,
                          max_retries=max_retries,
                          retry_on_detect=retry_on_detect)
@@ -259,11 +319,14 @@ class PagedServeEngine(ServeEngine):
         self._sel_width = min(4, self.max_blocks)
         if kernel == "fused":
             self._step_fused = jax.jit(self._step_fused_fn)
+        else:
+            self._score = jax.jit(self._score_fn)
         self._gather_ctx = jax.jit(self._gather_ctx_fn)
         self._extend = jax.jit(self._extend_fn)
         self._scatter = jax.jit(self._scatter_fn)
         self._scrub = jax.jit(self._scrub_fn)
         self._copy_block = jax.jit(self._copy_block_fn)
+        self._rollback = jax.jit(self._rollback_fn)
         self._flip = jax.jit(self._flip_fn, static_argnames=("into",))
 
     def _make_pool(self) -> PagedKVPool:
@@ -376,8 +439,9 @@ class PagedServeEngine(ServeEngine):
                        temps, topks, seeds, rids, counters):
         """One unified batched step on the fused backend: every slot feeds a
         chunk of ``q_lens[slot]`` tokens (0 = idle, 1 = decode, more =
-        chunked prefill / prefix-extend / block repair) and the model's
-        attention consumes the block pool *directly* through
+        chunked prefill / prefix-extend / block repair / a pending token
+        plus speculative draft rows) and the model's attention consumes the
+        block pool *directly* through
         :class:`repro.models.attention.PagedKVCache` — one natively batched
         ragged multi-token kernel launch per layer, no contiguous gather,
         resident block checksums verified inside the kernel's KV streaming
@@ -385,7 +449,14 @@ class PagedServeEngine(ServeEngine):
         fault batch is translated to the kernel's single-SEU descriptor
         (striking chunk row 0 of its target slot). ``tokens.shape[1]`` is
         the only shape degree of freedom, so the engine compiles exactly two
-        of these: width ``chunk_size`` and width 1."""
+        of these: width ``chunk_size`` and width 1.
+
+        This is the *score* stage of propose→score→accept: the full per-row
+        logits ``(ns, C, V)`` come back (f32) for the host acceptance stage
+        — row ``c`` of a speculating slot is the target distribution its
+        draft row ``c`` was proposed against — alongside the in-jit sampled
+        ``next_tokens`` (each slot's logits at ``q_len - 1``), which
+        non-speculating slots commit directly."""
         cfg = self.model.cfg
         L = cfg.num_layers
         ns = self.n_slots
@@ -399,21 +470,128 @@ class PagedServeEngine(ServeEngine):
             pos=jnp.broadcast_to(pos[None], (L,) + pos.shape),
             q_len=jnp.broadcast_to(q_lens[None], (L, ns)),
             bad=jnp.zeros((L, ns, self.max_blocks), jnp.int32))}
-        logits, rep, new_cache = self.model.extend(
-            params, tokens, cache, lengths=q_lens, fault=desc)
+        logits, rep, new_cache = self.model.score(
+            params, tokens, cache, fault=desc)
         nc = new_cache["attn"]
         bad = jnp.any(nc.bad > 0, axis=0)                  # (ns, mb)
         new_state = PagedKVState(k=nc.k, v=nc.v, kc1=nc.kc1, kc2=nc.kc2,
                                  vc1=nc.vc1, vc2=nc.vc2)
+        idx = jnp.clip(q_lens - 1, 0, chunk - 1)
+        last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
 
         def key_of(seed, rid, counter):
             return jax.random.fold_in(
                 jax.random.fold_in(jax.random.PRNGKey(seed), rid), counter)
 
         keys = jax.vmap(key_of)(seeds, rids, counters)
-        next_tokens = sample_tokens(logits, temperature=temps, top_k=topks,
+        next_tokens = sample_tokens(last, temperature=temps, top_k=topks,
                                     keys=keys)
-        return next_tokens, rep, bad, new_state
+        # the full per-row plane only leaves the program when an acceptance
+        # stage will read it — with speculation off (trace-static) the
+        # non-speculative hot path pays nothing for the generalization
+        logits_out = logits.astype(jnp.float32) if self._proposer is not None \
+            else jnp.zeros((0,), jnp.float32)
+        return logits_out, next_tokens, rep, bad, new_state
+
+    def _score_fn(self, params, tokens, state, bt, pos, q_lens, faults,
+                  temps, topks, seeds, rids, counters, verify_sel):
+        """Multi-token batched scoring step on the gather backend — the
+        *score* stage of propose→score→accept for ``kernel="gather"``.
+
+        Like :meth:`_decode_fn` but each slot feeds ``q_lens[slot]`` chunk
+        rows (1 = plain decode riding along, more = a pending token plus
+        draft rows; 0 = idle): gather-by-block-table with read-time checksum
+        verify, a vmapped multi-token EFTA extend per slot (causal within
+        the chunk, so row ``c`` conditions on rows ``< c`` exactly as
+        sequential decoding would), every valid row's K/V scattered back
+        into its block with the touched blocks' checksums regenerated, and
+        the FULL per-row logits returned for host acceptance. Padding rows
+        past ``q_len`` write to the null block and are causally invisible
+        to valid rows. The in-jit ``next_tokens`` (row ``q_len - 1``) serve
+        the non-speculating slots.
+
+        One fixed width (``chunk_size``) keeps this a single compiled
+        program; the engine only routes through it on steps where some slot
+        actually speculates, so the K = 0 path stays byte-for-byte the
+        PR-4 width-1 decode."""
+        cfg = self.model.cfg
+        a = cfg.attn
+        L, ns, bs = cfg.num_layers, self.n_slots, self.block_size
+        mb = self.max_blocks
+        C = tokens.shape[1]
+        kg, vg, bad = self._verify_gathered(state, bt, verify_sel)
+        czero = jnp.zeros((L, ns, a.num_kv_heads, 1, a.head_dim), kg.dtype)
+        cache = {"attn": KVCache(
+            k=kg, v=vg, pos=jnp.broadcast_to(pos[None], (L, ns)),
+            ck=czero, cv=czero)}
+        axes = jax.tree.map(lambda _: 1, cache)
+
+        def one(toks, row, f):
+            logits, rep, new_row = self.model.score(
+                params, toks[None], add_unit_batch(row), fault=f)
+            return logits[0], rep, drop_unit_batch(new_row)
+
+        logits, rep, new_cache = jax.vmap(
+            one, in_axes=(0, axes, 0), out_axes=(0, 0, axes))(
+                tokens, cache, faults)                      # (ns, C, V)
+
+        # scatter the chunk's appended rows back into their blocks (padding
+        # rows divert to the null scratch block), then regenerate exactly
+        # the touched blocks' checksums — mirroring the fused append path
+        node = new_cache["attn"]
+        c_idx = jnp.arange(C, dtype=jnp.int32)
+        p_abs = pos[:, None] + c_idx[None, :]               # (ns, C)
+        valid = c_idx[None, :] < q_lens[:, None]
+        p_clip = jnp.clip(p_abs, 0, self.cache_len - 1)
+        take = p_clip[None, :, None, :, None]
+        row_k = jnp.take_along_axis(node.k, take, axis=3)   # (L,ns,Hkv,C,hd)
+        row_v = jnp.take_along_axis(node.v, take, axis=3)
+        jrow = jnp.clip(p_abs // bs, 0, mb - 1)
+        tgt_rows = jnp.where(valid, jnp.take_along_axis(bt, jrow, axis=1), 0)
+        offs = jnp.where(valid, p_abs % bs, 0)
+        vals_k = row_k.transpose(1, 3, 0, 2, 4)             # (ns,C,L,Hkv,hd)
+        vals_v = row_v.transpose(1, 3, 0, 2, 4)
+        new_k = state.k.at[:, tgt_rows, :, offs, :].set(vals_k)
+        new_v = state.v.at[:, tgt_rows, :, offs, :].set(vals_v)
+        nt = (C + bs - 2) // bs + 1
+        j0 = pos // bs
+        jt = j0[:, None] + jnp.arange(nt, dtype=jnp.int32)[None, :]
+        last_j = (pos + jnp.maximum(q_lens, 1) - 1) // bs
+        touched = (jt <= last_j[:, None]) & (q_lens[:, None] > 0)
+        tid = jnp.where(
+            touched, jnp.take_along_axis(bt, jnp.clip(jt, 0, mb - 1),
+                                         axis=1), 0)
+        ck = cks.encode_kv(new_k[:, tid], self.check_stride)
+        cv = cks.encode_kv(new_v[:, tid], self.check_stride)
+        new_state = PagedKVState(
+            k=new_k, v=new_v,
+            kc1=state.kc1.at[:, tid].set(ck.c1),
+            kc2=state.kc2.at[:, tid].set(ck.c2),
+            vc1=state.vc1.at[:, tid].set(cv.c1),
+            vc2=state.vc2.at[:, tid].set(cv.c2))
+
+        idx = jnp.clip(q_lens - 1, 0, C - 1)
+        last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+
+        def key_of(seed, rid, counter):
+            return jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(seed), rid), counter)
+
+        keys = jax.vmap(key_of)(seeds, rids, counters)
+        next_tokens = sample_tokens(last, temperature=temps, top_k=topks,
+                                    keys=keys)
+        return (logits.astype(jnp.float32), next_tokens, rep, bad,
+                new_state)
+
+    def _rollback_fn(self, state, bt, keep_pos, old_pos):
+        """Jitted fault-tolerant KV rollback (one program for every
+        acceptance outcome — ``max_span`` is the static chunk width). See
+        :func:`repro.models.attention.paged_rollback`."""
+        k, v, kc1, kc2, vc1, vc2, bad = paged_rollback(
+            state.k, state.v, state.kc1, state.kc2, state.vc1, state.vc2,
+            bt, keep_pos, old_pos, check_stride=self.check_stride,
+            threshold=self.check_threshold, max_span=self.chunk_size)
+        return PagedKVState(k, v, kc1, kc2, vc1, vc2), bad
 
     def _gather_ctx_fn(self, state, bids, n_ctx):
         """Materialize a batch-1 contiguous context cache from ``bids`` (mb,)
@@ -577,6 +755,8 @@ class PagedServeEngine(ServeEngine):
         self._bt[slot] = 0
         self._pos[slot] = 0
         self._queue[slot] = []
+        if self._proposer is not None:
+            self._proposer.release(slot)
         self.pool.release(slot)
 
     def _admit(self, req: Request) -> None:
@@ -843,31 +1023,51 @@ class PagedServeEngine(ServeEngine):
         skips as verified-and-untouched, which is exactly where a deferred
         flip hides. A mismatch is repaired immediately through the normal
         block re-prefill path; clean blocks refresh their verification
-        clock so the scrub cursor keeps rotating."""
+        clock so the scrub cursor keeps rotating.
+
+        Leftover batch capacity draws from the **parked prefix-cache
+        blocks** (ref == 0, retained for future hits): they sit in no live
+        table, so read-time verification never reaches them and a flip
+        would otherwise wait for the next admission gather to surface. A
+        corrupted parked block is discarded (prefix-cache entry forgotten,
+        block freed) — detection-before-use repair for cache-only state:
+        the next admission takes a clean miss and re-prefills."""
         live = {}
         for req in self.scheduler.active_rows():
             if req.slot is None or req.is_done():
                 continue
             for j, bid in enumerate(req.block_ids):
                 live.setdefault(bid, (req, j))
-        if not live:
-            return
         order = sorted(live, key=self.pool.blocks.verified_at)
         batch = order[:self.scrub_batch]
+        if len(batch) < self.scrub_batch:
+            parked = sorted(self.pool.blocks.parked_blocks(),
+                            key=self.pool.blocks.verified_at)
+            batch = batch + parked[:self.scrub_batch - len(batch)]
+        if not batch:
+            return
         padded = batch + [NULL_BLOCK] * (self.scrub_batch - len(batch))
         bad = np.asarray(self._scrub(self.pool.state,
                                      jnp.asarray(padded, dtype=jnp.int32)))
         self.paged_stats.kv_scrubbed_blocks += len(batch)
         for bid, is_bad in zip(batch, bad[:len(batch)]):
-            req, j = live[bid]
-            if is_bad:
-                self.paged_stats.kv_detected_blocks += 1
-                six = np.zeros((6,), np.int64)
-                six[5] = 1
-                self.telemetry.observe_prefill(req.rid, six, six)
-                self._repair_blocks(req, [j])
-            else:
-                self.pool.blocks.mark_verified(bid)
+            if bid in live:
+                req, j = live[bid]
+                if is_bad:
+                    self.paged_stats.kv_detected_blocks += 1
+                    six = np.zeros((6,), np.int64)
+                    six[5] = 1
+                    self.telemetry.observe_prefill(req.rid, six, six)
+                    self._repair_blocks(req, [j])
+                else:
+                    self.pool.blocks.mark_verified(bid)
+            else:                           # parked prefix-cache block
+                if is_bad:
+                    self.paged_stats.kv_detected_blocks += 1
+                    self.telemetry.observe_scrub(1)
+                    self.pool.blocks.discard_parked(bid)
+                else:
+                    self.pool.blocks.mark_verified(bid)
 
     # -- read-time repair ---------------------------------------------------
 
@@ -916,7 +1116,7 @@ class PagedServeEngine(ServeEngine):
             q_lens[slot] = n_fill
             pos_vec = self._pos.copy()
             pos_vec[slot] = start
-            _, _, _, new_state = self._step_fused(
+            _, _, _, _, new_state = self._step_fused(
                 self.params, jnp.asarray(tokens), self.pool.state,
                 jnp.asarray(self._bt), jnp.asarray(pos_vec),
                 jnp.asarray(q_lens), self._no_faults,
@@ -959,6 +1159,132 @@ class PagedServeEngine(ServeEngine):
             self.pool.blocks.note_write(req.block_ids[j])
             self.paged_stats.kv_repaired_blocks += 1
 
+    # -- speculation: propose / accept / roll back --------------------------
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of scored draft tokens the target accepted."""
+        ps = self.paged_stats
+        return 0.0 if not ps.spec_proposed_tokens \
+            else ps.spec_accepted_tokens / ps.spec_proposed_tokens
+
+    def _spec_cap(self, req: Request) -> int:
+        """Most draft rows this request may score this step: bounded by the
+        configured draft length, the chunk width (the pending token takes
+        one row), and the request's remaining token budget (a spec step
+        commits at most K + 1 tokens, never past ``max_new_tokens``)."""
+        return max(0, min(self.draft_len, self.chunk_size - 1,
+                          req.max_new_tokens - req.num_generated - 1))
+
+    def _propose_drafts(self, active_reqs: Sequence[Request],
+                        draft_grants: Dict[int, int]
+                        ) -> Dict[int, np.ndarray]:
+        """Run the proposer for every slot granted draft budget. Returns
+        slot -> draft tokens (slots with empty proposals are left out — the
+        K = 0 degenerate path). Draft-pass EFTA telemetry (the draft
+        model's own detections/retries) is folded into the per-request
+        draft counters here."""
+        spec: Dict[int, np.ndarray] = {}
+        for r in active_reqs:
+            kd = draft_grants.get(r.rid, 0)
+            if kd <= 0 or r.slot is None:
+                continue
+            d = self._proposer.propose(r.slot, self._feed_tokens(r), kd)
+            rep = self._proposer.drain_report()
+            if rep is not None:
+                det, cor, retries = rep
+                six_d = np.concatenate([det, [0]]).astype(np.int64)
+                six_c = np.concatenate([cor, [0]]).astype(np.int64)
+                self.telemetry.observe_draft(r.rid, six_d, six_c,
+                                             retries=retries)
+            if len(d):
+                spec[r.slot] = np.asarray(d, np.int32)
+        return spec
+
+    def _accept_slot(self, req: Request, rows: np.ndarray,
+                     drafts: np.ndarray
+                     ) -> Tuple[List[int], Optional[int]]:
+        """Acceptance verdict for one slot's scored chunk. ``rows``:
+        (k+1, V) target logits (row j scored draft j; row k feeds the bonus
+        token). Returns ``(drafts_committed, bonus)`` — the accepted draft
+        prefix (possibly EOS-truncated) and the follow-up token (``None``
+        when an accepted EOS ends the request before the bonus row)."""
+        s = req.sampling
+        rng = None
+        if s.temperature > 0.0:
+            # per-(request, step) deterministic stream, independent of the
+            # in-jit sampler's keys (greedy never consults it)
+            rng = np.random.default_rng(
+                (abs(int(s.seed)), int(req.rid), int(req.num_generated)))
+        a, t_next = speculative_accept(
+            rows, drafts, temperature=float(s.temperature),
+            top_k=int(s.top_k), rng=rng)
+        drafts_committed = [int(t) for t in drafts[:a]]
+        bonus: Optional[int] = int(t_next)
+        if req.eos_id is not None:
+            for i, t in enumerate(drafts_committed):
+                if t == req.eos_id:
+                    drafts_committed = drafts_committed[:i + 1]
+                    bonus = None
+                    break
+        return drafts_committed, bonus
+
+    def _apply_rollback(self, rollback_plan: Dict[int, Tuple[int, int]],
+                        by_slot: Dict[int, Request]) -> None:
+        """Truncate the rejected draft rows of every speculating slot in one
+        jitted pass (``kv_len`` truncation + tail-block checksum
+        re-generation), with the anti-laundering guard: blocks that fail
+        their PRE-rollback checksums are flagged, counted as site-6
+        detections, and re-prefilled from committed tokens — corruption
+        that struck between the scoring step's verify and this rollback is
+        detected, never silently restamped into a consistent state."""
+        if self._pre_rollback_hook is not None:
+            self._pre_rollback_hook(self)
+        keep = self._pos.copy()                 # already rewound to keep_pos
+        oldp = self._pos.copy()
+        for slot, (keep_pos, scored_pos) in rollback_plan.items():
+            keep[slot] = keep_pos
+            oldp[slot] = scored_pos
+        if not (oldp > keep).any():
+            return
+        new_state, bad = self._rollback(
+            self.pool.state, jnp.asarray(self._bt), jnp.asarray(keep),
+            jnp.asarray(oldp))
+        self.pool.state = new_state
+        bs = self.block_size
+        for slot, (keep_pos, scored_pos) in rollback_plan.items():
+            if scored_pos <= keep_pos:
+                continue
+            req = by_slot[slot]
+            self.paged_stats.spec_rolled_back_rows += scored_pos - keep_pos
+            for bi in range(keep_pos // bs,
+                            min((scored_pos - 1) // bs + 1,
+                                len(req.block_ids))):
+                self.pool.blocks.note_write(req.block_ids[bi])
+        bad_np = np.asarray(bad)
+        for slot in list(rollback_plan):
+            idxs = np.flatnonzero(bad_np[slot])
+            if idxs.size == 0:
+                continue
+            req = by_slot[slot]
+            self.paged_stats.rollback_detected_blocks += int(idxs.size)
+            self.paged_stats.kv_detected_blocks += int(idxs.size)
+            six = np.zeros((6,), np.int64)
+            six[5] = idxs.size
+            self.telemetry.observe_prefill(req.rid, six, six)
+            # blocks holding committed rows re-prefill from the committed
+            # tokens (resident passed explicitly: after an accepted EOS
+            # draft every generated token's KV row is resident, unlike the
+            # non-speculative pending-token convention). A flagged block
+            # wholly past the committed prefix needs no re-prefill — the
+            # rollback just rewrote and restamped it and none of its rows
+            # are reachable below kv_len — so the truncation IS its repair.
+            keep_pos = int(self._pos[slot])
+            resident = self._feed_tokens(req)[:keep_pos]
+            trunc_only = sum(1 for j in idxs if j * bs >= keep_pos)
+            self.paged_stats.kv_repaired_blocks += trunc_only
+            self._repair_blocks(req, idxs, resident=resident)
+
     # -- stepping -----------------------------------------------------------
 
     def step(self, faults: Optional[FaultSpec] = None) -> List[Request]:
@@ -991,30 +1317,46 @@ class PagedServeEngine(ServeEngine):
             return finished
 
         # chunk plan: one token per request unconditionally (decodes never
-        # starve), prompt surplus FCFS within the scheduler's chunk budget
-        grants = self.scheduler.plan_chunks(
-            [(r, len(self._queue[r.slot])) for r in active_reqs],
-            self.chunk_size)
+        # starve), prompt surplus FCFS within the scheduler's chunk budget;
+        # with speculation on, steady-state decodes additionally propose up
+        # to draft_len candidate rows from the leftover budget (prompt
+        # chunks rank first — speculation never starves admissions)
+        demands = [(r, len(self._queue[r.slot])) for r in active_reqs]
+        spec_tokens: Dict[int, np.ndarray] = {}
+        if self._proposer is not None:
+            wants = {r.rid: self._spec_cap(r) for r in active_reqs}
+            grants, draft_grants = self.scheduler.plan_chunks(
+                demands, self.chunk_size, draft_wants=wants)
+            spec_tokens = self._propose_drafts(active_reqs, draft_grants)
+        else:
+            grants = self.scheduler.plan_chunks(demands, self.chunk_size)
         for r in list(active_reqs):
-            if r.slot is not None and grants[r.rid] > 0:
-                self._ensure_capacity(r, grants[r.rid])
+            need = grants[r.rid] + len(spec_tokens.get(r.slot, ()))
+            if r.slot is not None and need > 0:
+                self._ensure_capacity(r, need)
         active_reqs = [r for r in active_reqs
                        if r.slot is not None and not r.is_done()]
+        spec_tokens = {s: d for s, d in spec_tokens.items()
+                       if any(r.slot == s for r in active_reqs)}
         if not active_reqs:
             return finished
         active = [r.slot for r in active_reqs]
         by_slot = {r.slot: r for r in active_reqs}
 
-        # pure-decode steps run the width-1 program; any prefill surplus
-        # promotes the step to the chunk-width program (the only two shapes
-        # this engine ever compiles)
-        chunk = self.chunk_size if any(
-            grants[r.rid] > 1 for r in active_reqs) else 1
+        # pure-decode steps run the width-1 program; any prefill surplus or
+        # draft row promotes the step to the chunk-width program (the only
+        # two shapes this engine ever compiles — draft K pads to the chunk)
+        chunk = self.chunk_size if (spec_tokens or any(
+            grants[r.rid] > 1 for r in active_reqs)) else 1
         tokens = np.zeros((self.n_slots, chunk), np.int32)
         q_lens = np.zeros((self.n_slots,), np.int32)
         for r in active_reqs:
             g = grants[r.rid]
             tokens[r.slot, :g] = self._queue[r.slot][:g]
+            d = spec_tokens.get(r.slot)
+            if d is not None:
+                tokens[r.slot, g:g + len(d)] = d
+                g += len(d)
             q_lens[r.slot] = g
 
         if faults is None:
@@ -1026,11 +1368,14 @@ class PagedServeEngine(ServeEngine):
         attempt_faults = faults
         det_acc = np.zeros((self.n_slots, 5), np.int64)
         cor_acc = np.zeros((self.n_slots, 5), np.int64)
+        redet_acc = np.zeros((self.n_slots, 5), np.int64)
+        kv_redet = np.zeros((self.n_slots,), np.int64)
         seen_bad: set = set()
         tok_dev = jnp.asarray(tokens)
         qlen_dev = jnp.asarray(q_lens)
         while True:
-            next_tokens, rep, bad, new_state = self._step_fused(
+            is_retry = (efta_retries + kv_retries) > 0
+            logits, next_tokens, rep, bad, new_state = self._step_fused(
                 self.params, tok_dev, self.pool.state,
                 jnp.asarray(self._bt), jnp.asarray(self._pos), qlen_dev,
                 attempt_faults, jnp.asarray(self._temps),
@@ -1038,6 +1383,8 @@ class PagedServeEngine(ServeEngine):
                 jnp.asarray(self._rids), jnp.asarray(self._counters))
             det_acc += np.asarray(rep.detected, np.int64)
             cor_acc += np.asarray(rep.corrected, np.int64)
+            if is_retry:
+                redet_acc += np.asarray(rep.detected, np.int64)
             bad_np = np.asarray(bad)
             kv_hit_slots = [s for s in active if bad_np[s].any()]
             if kv_hit_slots:
@@ -1048,6 +1395,8 @@ class PagedServeEngine(ServeEngine):
                 # would bake the corruption into the refreshed block
                 # checksums and make it permanently undetectable.
                 kv_det[kv_hit_slots] += bad_np[kv_hit_slots].sum(-1)
+                if is_retry:
+                    kv_redet[kv_hit_slots] += bad_np[kv_hit_slots].sum(-1)
                 bad_bids = {by_slot[s].block_ids[j] for s in kv_hit_slots
                             for j in np.flatnonzero(bad_np[s])
                             if j < len(by_slot[s].block_ids)}
@@ -1078,7 +1427,9 @@ class PagedServeEngine(ServeEngine):
                 r.rid: (np.concatenate([det_acc[r.slot],
                                         kv_det[r.slot:r.slot + 1]]),
                         np.concatenate([cor_acc[r.slot],
-                                        kv_cor[r.slot:r.slot + 1]]))
+                                        kv_cor[r.slot:r.slot + 1]]),
+                        np.concatenate([redet_acc[r.slot],
+                                        kv_redet[r.slot:r.slot + 1]]))
                 for r in active_reqs}
             for r in active_reqs:
                 r.retries += retries
@@ -1096,7 +1447,9 @@ class PagedServeEngine(ServeEngine):
         self._poisoned_steps = 0
         self.pool.state = new_state
         next_np = np.asarray(next_tokens)
+        logits_np = np.asarray(logits) if spec_tokens else None
         per_request = {}
+        rollback_plan: Dict[int, Tuple[int, int]] = {}
         bs = self.block_size
         for req in active_reqs:
             slot = req.slot
@@ -1104,7 +1457,37 @@ class PagedServeEngine(ServeEngine):
             old_pos = int(self._pos[slot])
             new_pos = old_pos + g
             req.retries += retries
-            if g:
+            d = spec_tokens.get(slot)
+            if d is not None:
+                # accept: commit the longest valid draft prefix + the bonus/
+                # resample token; rewind the slot past the rejected rows
+                # (the KV rollback below truncates them on-device)
+                k = len(d)
+                committed_drafts, bonus = self._accept_slot(
+                    req, logits_np[slot, :k + 1], d)
+                a = len(committed_drafts)
+                keep_pos = old_pos + 1 + a     # pending row + accepted rows
+                for bi in range(old_pos // bs,
+                                min((new_pos - 1) // bs + 1,
+                                    len(req.block_ids))):
+                    self.pool.blocks.note_write(req.block_ids[bi])
+                req.generated.extend(committed_drafts)
+                if bonus is not None:
+                    req.generated.append(bonus)
+                self._queue[slot] = [] if bonus is None else [bonus]
+                self._counters[slot] = req.num_generated
+                self._pos[slot] = keep_pos
+                n_new = a + (0 if bonus is None else 1)
+                self.stats.tokens += n_new
+                self.paged_stats.spec_proposed_tokens += k
+                self.paged_stats.spec_accepted_tokens += a
+                self.telemetry.observe_draft(
+                    req.rid, np.zeros(6, np.int64), np.zeros(6, np.int64),
+                    proposed=k, accepted=a)
+                if keep_pos < new_pos:
+                    rollback_plan[slot] = (keep_pos, new_pos)
+                self._register_full_blocks(req, old_pos, keep_pos)
+            elif g:
                 if g > 1:
                     self.paged_stats.chunked_prefill_tokens += g
                 # the chunk rewrote these blocks: their generations move
@@ -1127,7 +1510,12 @@ class PagedServeEngine(ServeEngine):
                 self._register_full_blocks(req, old_pos, new_pos)
             per_request[req.rid] = (
                 np.concatenate([det_acc[slot], kv_det[slot:slot + 1]]),
-                np.concatenate([cor_acc[slot], kv_cor[slot:slot + 1]]))
+                np.concatenate([cor_acc[slot], kv_cor[slot:slot + 1]]),
+                np.concatenate([redet_acc[slot], kv_redet[slot:slot + 1]]))
+        if spec_tokens:
+            self.paged_stats.spec_steps += 1
+        if rollback_plan:
+            self._apply_rollback(rollback_plan, by_slot)
         self.telemetry.observe_step(per_request, retries=retries)
         self.stats.steps += 1
         self.stats.retries += retries
@@ -1144,6 +1532,37 @@ class PagedServeEngine(ServeEngine):
                        if not r.is_done()]
         if not active_reqs:
             return finished
+
+        # speculation (gather): the chunk-wide scoring program writes C rows
+        # into each slot's contiguous temp view, so it needs headroom
+        # ``pos + C <= cache_len`` on every slot (a ring wrap in the temp
+        # would clobber context rows); near the boundary the step falls back
+        # to the K = 0 width-1 decode below.
+        spec_tokens: Dict[int, np.ndarray] = {}
+        if self._proposer is not None and all(
+                int(self._pos[r.slot]) + self.chunk_size <= self.cache_len
+                for r in active_reqs):
+            wants = {r.rid: self._spec_cap(r) for r in active_reqs}
+            _, draft_grants = self.scheduler.plan_chunks(
+                [(r, 1) for r in active_reqs], self.chunk_size,
+                draft_wants=wants)
+            spec_tokens = self._propose_drafts(active_reqs, draft_grants)
+            for r in list(active_reqs):
+                d = spec_tokens.get(r.slot)
+                if d is not None and r.slot is not None:
+                    self._ensure_capacity(r, 1 + len(d))
+            if spec_tokens:
+                # capacity pressure may have preempted someone — refilter
+                active_reqs = [r for r in self.scheduler.active_rows()
+                               if not r.is_done() and r.slot is not None]
+                spec_tokens = {s: d for s, d in spec_tokens.items()
+                               if any(r.slot == s for r in active_reqs)}
+                if not active_reqs:
+                    return finished
+        if spec_tokens:
+            return self._step_gather_spec(faults, finished, active_reqs,
+                                          spec_tokens)
+
         active = [r.slot for r in active_reqs]
         by_slot = {r.slot: r for r in active_reqs}
 
@@ -1156,8 +1575,11 @@ class PagedServeEngine(ServeEngine):
         attempt_faults = faults
         det_acc = np.zeros((self.n_slots, 5), np.int64)
         cor_acc = np.zeros((self.n_slots, 5), np.int64)
+        redet_acc = np.zeros((self.n_slots, 5), np.int64)
+        kv_redet = np.zeros((self.n_slots,), np.int64)
         seen_bad: set = set()
         while True:
+            is_retry = (efta_retries + kv_retries) > 0
             sel, folds, skips = self._verify_selector()
             self.paged_stats.kv_verified_blocks += folds
             self.paged_stats.kv_verify_skips += skips
@@ -1170,6 +1592,8 @@ class PagedServeEngine(ServeEngine):
             next_tokens, rep, bad, new_state = self._decode(self.params, *args)
             det_acc += np.asarray(rep.detected, np.int64)
             cor_acc += np.asarray(rep.corrected, np.int64)
+            if is_retry:
+                redet_acc += np.asarray(rep.detected, np.int64)
             bad_np = np.asarray(bad)
             kv_hit_slots = [s for s in active if bad_np[s].any()]
             if kv_hit_slots:
@@ -1180,6 +1604,8 @@ class PagedServeEngine(ServeEngine):
                 # gather would bake the corruption into the tail block's
                 # refreshed checksums and make it permanently undetectable.
                 kv_det[kv_hit_slots] += bad_np[kv_hit_slots].sum(-1)
+                if is_retry:
+                    kv_redet[kv_hit_slots] += bad_np[kv_hit_slots].sum(-1)
                 # pool-level stats count distinct *blocks*, once per step (a
                 # shared prefix block flagged from several slots, or again on
                 # a retry, is one corruption), so detected == repaired holds
@@ -1219,7 +1645,9 @@ class PagedServeEngine(ServeEngine):
                 r.rid: (np.concatenate([det_acc[r.slot],
                                         kv_det[r.slot:r.slot + 1]]),
                         np.concatenate([cor_acc[r.slot],
-                                        kv_cor[r.slot:r.slot + 1]]))
+                                        kv_cor[r.slot:r.slot + 1]]),
+                        np.concatenate([redet_acc[r.slot],
+                                        kv_redet[r.slot:r.slot + 1]]))
                 for r in active_reqs}
             for r in active_reqs:
                 r.retries += retries
@@ -1265,8 +1693,193 @@ class PagedServeEngine(ServeEngine):
             self._register_full_blocks(req, old_pos, old_pos + 1)
             per_request[req.rid] = (
                 np.concatenate([det_acc[slot], kv_det[slot:slot + 1]]),
-                np.concatenate([cor_acc[slot], kv_cor[slot:slot + 1]]))
+                np.concatenate([cor_acc[slot], kv_cor[slot:slot + 1]]),
+                np.concatenate([redet_acc[slot], kv_redet[slot:slot + 1]]))
             self.stats.tokens += 1
+        self.telemetry.observe_step(per_request, retries=retries)
+        self.stats.steps += 1
+        self.stats.retries += retries
+        if self.kv_verify == "stamped" and self.scrub_interval and \
+                self.stats.steps % self.scrub_interval == 0:
+            self._scrub_pass()
+        return finished
+
+    def _step_gather_spec(self, faults, finished: List[Request],
+                          active_reqs: List[Request],
+                          spec_tokens: Dict[int, np.ndarray]
+                          ) -> List[Request]:
+        """Gather-backend propose→score→accept step: at least one slot
+        scored draft rows, so the batch routes through the chunk-wide
+        ``_score`` program (slots without drafts ride along with
+        ``q_len = 1`` — their committed token is the in-jit sample of row 0,
+        the same value the width-1 decode would produce). Mirrors
+        :meth:`_step_gather`'s KV-repair/EFTA retry discipline, then runs
+        the acceptance stage and the fault-tolerant KV rollback."""
+        active = [r.slot for r in active_reqs]
+        by_slot = {r.slot: r for r in active_reqs}
+        C = self.chunk_size
+        tokens = np.zeros((self.n_slots, C), np.int32)
+        q_lens = np.zeros((self.n_slots,), np.int32)
+        for r in active_reqs:
+            slot = r.slot
+            tokens[slot, 0] = self._pending[slot]
+            g = 1
+            d = spec_tokens.get(slot)
+            if d is not None:
+                tokens[slot, 1:1 + len(d)] = d
+                g += len(d)
+            q_lens[slot] = g
+
+        if faults is None:
+            faults = self._no_faults
+        kv_det = np.zeros((self.n_slots,), np.int64)
+        kv_cor = np.zeros((self.n_slots,), np.int64)
+        efta_retries = 0
+        kv_retries = 0
+        attempt_faults = faults
+        det_acc = np.zeros((self.n_slots, 5), np.int64)
+        cor_acc = np.zeros((self.n_slots, 5), np.int64)
+        redet_acc = np.zeros((self.n_slots, 5), np.int64)
+        kv_redet = np.zeros((self.n_slots,), np.int64)
+        seen_bad: set = set()
+        tok_dev = jnp.asarray(tokens)
+        qlen_dev = jnp.asarray(q_lens)
+        while True:
+            is_retry = (efta_retries + kv_retries) > 0
+            sel, folds, skips = self._verify_selector()
+            self.paged_stats.kv_verified_blocks += folds
+            self.paged_stats.kv_verify_skips += skips
+            logits, next_tokens, rep, bad, new_state = self._score(
+                self.params, tok_dev, self.pool.state,
+                jnp.asarray(self._bt), jnp.asarray(self._pos), qlen_dev,
+                attempt_faults, jnp.asarray(self._temps),
+                jnp.asarray(self._topks), jnp.asarray(self._seeds),
+                jnp.asarray(self._rids), jnp.asarray(self._counters),
+                None if sel is None else jnp.asarray(sel))
+            det_acc += np.asarray(rep.detected, np.int64)
+            cor_acc += np.asarray(rep.corrected, np.int64)
+            if is_retry:
+                redet_acc += np.asarray(rep.detected, np.int64)
+            bad_np = np.asarray(bad)
+            kv_hit_slots = [s for s in active if bad_np[s].any()]
+            if kv_hit_slots:
+                # same contract as _step_gather: repair, drop the attempt,
+                # retry — never commit an attempt that read poisoned KV
+                kv_det[kv_hit_slots] += bad_np[kv_hit_slots].sum(-1)
+                if is_retry:
+                    kv_redet[kv_hit_slots] += bad_np[kv_hit_slots].sum(-1)
+                bad_bids = {by_slot[s].block_ids[j] for s in kv_hit_slots
+                            for j in np.flatnonzero(bad_np[s])
+                            if j < len(by_slot[s].block_ids)}
+                self.paged_stats.kv_detected_blocks += \
+                    len(bad_bids - seen_bad)
+                seen_bad |= bad_bids
+                healed: set = set()
+                for s in kv_hit_slots:
+                    idxs = np.flatnonzero(bad_np[s])
+                    kv_cor[s] += idxs.size
+                    self._repair_blocks(by_slot[s], idxs, healed=healed)
+                if kv_retries < max(1, self.max_retries):
+                    kv_retries += 1
+                    attempt_faults = self._no_faults
+                    continue
+            if self._needs_retry_rows(rep, rows=active) and \
+                    efta_retries < self.max_retries:
+                efta_retries += 1
+                attempt_faults = self._no_faults
+                continue
+            break
+        retries = efta_retries + kv_retries
+
+        if kv_hit_slots:
+            # final attempt still read poisoned KV — commit nothing (see
+            # _step_gather for the full rationale)
+            per_request = {
+                r.rid: (np.concatenate([det_acc[r.slot],
+                                        kv_det[r.slot:r.slot + 1]]),
+                        np.concatenate([cor_acc[r.slot],
+                                        kv_cor[r.slot:r.slot + 1]]),
+                        np.concatenate([redet_acc[r.slot],
+                                        kv_redet[r.slot:r.slot + 1]]))
+                for r in active_reqs}
+            for r in active_reqs:
+                r.retries += retries
+            self.telemetry.observe_step(per_request, retries=retries)
+            self.stats.retries += retries
+            self._poisoned_steps += 1
+            if self._poisoned_steps > 3:
+                raise RuntimeError(
+                    "resident KV corruption persists across block "
+                    "re-prefills on consecutive steps — failing memory, not "
+                    "a transient SEU; cordon this host and restart "
+                    "elsewhere")
+            return finished
+
+        # commit
+        self._poisoned_steps = 0
+        self.pool.state = new_state
+        if self.kv_verify == "stamped":
+            for req in active_reqs:
+                entries = (range(len(req.block_ids)) if sel is None
+                           or sel is self._sel_all
+                           else [int(j) for j in sel[req.slot] if j >= 0])
+                for j in entries:
+                    if j < len(req.block_ids):
+                        self.pool.blocks.mark_verified(req.block_ids[j])
+        next_np = np.asarray(next_tokens)
+        logits_np = np.asarray(logits)
+        per_request = {}
+        rollback_plan: Dict[int, Tuple[int, int]] = {}
+        bs = self.block_size
+        for req in active_reqs:
+            slot = req.slot
+            old_pos = int(self._pos[slot])
+            g = int(q_lens[slot])
+            scored_pos = old_pos + g
+            req.retries += retries
+            d = spec_tokens.get(slot)
+            if d is None:
+                tok = int(next_np[slot])
+                req.generated.append(tok)
+                self._pending[slot] = tok
+                self._counters[slot] += 1
+                self.pool.blocks.note_write(
+                    req.block_ids[old_pos // bs])
+                self._pos[slot] = old_pos + 1
+                self._register_full_blocks(req, old_pos, old_pos + 1)
+                self.stats.tokens += 1
+            else:
+                k = len(d)
+                committed_drafts, bonus = self._accept_slot(
+                    req, logits_np[slot, :k + 1], d)
+                a = len(committed_drafts)
+                keep_pos = old_pos + 1 + a
+                for bi in range(old_pos // bs,
+                                min((scored_pos - 1) // bs + 1,
+                                    len(req.block_ids))):
+                    self.pool.blocks.note_write(req.block_ids[bi])
+                req.generated.extend(committed_drafts)
+                if bonus is not None:
+                    req.generated.append(bonus)
+                    self._pending[slot] = bonus
+                self._counters[slot] = req.num_generated
+                self._pos[slot] = keep_pos
+                self.stats.tokens += a + (0 if bonus is None else 1)
+                self.paged_stats.spec_proposed_tokens += k
+                self.paged_stats.spec_accepted_tokens += a
+                self.telemetry.observe_draft(
+                    req.rid, np.zeros(6, np.int64), np.zeros(6, np.int64),
+                    proposed=k, accepted=a)
+                if keep_pos < scored_pos:
+                    rollback_plan[slot] = (keep_pos, scored_pos)
+                self._register_full_blocks(req, old_pos, keep_pos)
+            per_request[req.rid] = (
+                np.concatenate([det_acc[slot], kv_det[slot:slot + 1]]),
+                np.concatenate([cor_acc[slot], kv_cor[slot:slot + 1]]),
+                np.concatenate([redet_acc[slot], kv_redet[slot:slot + 1]]))
+        self.paged_stats.spec_steps += 1
+        if rollback_plan:
+            self._apply_rollback(rollback_plan, by_slot)
         self.telemetry.observe_step(per_request, retries=retries)
         self.stats.steps += 1
         self.stats.retries += retries

@@ -5,10 +5,19 @@ parameters ride along as arrays (temperature, top-k, PRNG key per row), so one
 compiled ``sample_tokens`` serves an arbitrary mix of greedy and stochastic
 requests in the same batch. ``temperature == 0`` rows take the exact
 ``argmax`` path (bit-identical to the sequential greedy decoder).
+
+:func:`speculative_accept` is the *accept* stage of the engine's
+propose→score→accept contract: standard speculative rejection sampling over
+the target's per-row logits, run host-side on the scored chunk. Greedy
+requests take the exact-argmax path, which is what makes greedy speculative
+decoding token-identical to the non-speculative engine (the parity oracle).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -62,3 +71,91 @@ def sample_tokens(logits: jax.Array, *, temperature: jax.Array,
     stochastic = jnp.argmax(masked / t_safe[:, None] + gumbel, axis=-1)
     return jnp.where(greedy, jnp.argmax(logits, axis=-1),
                      stochastic).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: the accept stage (host-side, numpy)
+# ---------------------------------------------------------------------------
+
+def target_probs(row: np.ndarray, *, temperature: float,
+                 top_k: int) -> np.ndarray:
+    """The target distribution one logits row samples from: top-k truncation
+    then temperature-scaled softmax — exactly the distribution
+    :func:`sample_tokens`'s Gumbel-max draw is equivalent to."""
+    row = np.asarray(row, np.float64)
+    if top_k > 0:
+        kth = np.sort(row)[-min(top_k, row.size)]
+        row = np.where(row >= kth, row, -np.inf)
+    t = max(float(temperature), 1e-6)
+    z = row / t
+    z = z - np.max(z)
+    p = np.exp(z)
+    return p / p.sum()
+
+
+def speculative_accept(
+    rows: np.ndarray,
+    draft: np.ndarray,
+    *,
+    temperature: float,
+    top_k: int,
+    rng: Optional[np.random.Generator] = None,
+    q_probs: Optional[np.ndarray] = None,
+) -> Tuple[int, int]:
+    """Standard speculative rejection sampling against the target logits.
+
+    ``rows``: (k+1, V) target logits for the scored chunk — row ``j`` is
+    ``p(. | context, accepted rows 0..j-1)``, i.e. the distribution draft
+    token ``draft[j]`` was proposed for; row ``k`` conditions on all k
+    drafts and supplies the bonus token when every draft is accepted.
+    ``q_probs`` (k,) optionally gives the proposer's probability of each
+    draft token (default 1.0: a deterministic one-hot proposer — the
+    n-gram/prompt-lookup case, or a greedy draft model). The residual
+    distribution is computed assuming the proposer's mass is concentrated
+    on the proposed token (exact for the one-hot proposers shipped here;
+    an arbitrary stochastic proposer would need its full q vector).
+
+    Returns ``(n_accepted, next_token)``: the longest accepted draft prefix
+    and the token sampled after it (the bonus token from row
+    ``n_accepted`` when all drafts were accepted, else the residual-
+    distribution resample at the rejection row). The committed tokens are
+    ``draft[:n_accepted] + [next_token]`` — by the standard argument each
+    committed token is distributed exactly as a non-speculative sample from
+    the target, so speculation changes throughput, never the distribution.
+
+    ``temperature <= 0`` is the exact greedy path: accept ``draft[j]`` iff
+    it equals ``argmax(rows[j])``, bonus/resample by argmax — token-
+    identical to the non-speculative greedy engine.
+    """
+    rows = np.asarray(rows, np.float32)
+    draft = np.asarray(draft, np.int64).reshape(-1)
+    k = draft.size
+    assert rows.shape[0] >= k + 1, (rows.shape, k)
+
+    if temperature <= 0.0:
+        n = 0
+        while n < k and int(np.argmax(rows[n])) == int(draft[n]):
+            n += 1
+        return n, int(np.argmax(rows[n]))
+
+    assert rng is not None, "stochastic acceptance needs a PRNG"
+    n = 0
+    while n < k:
+        p = target_probs(rows[n], temperature=temperature, top_k=top_k)
+        q = 1.0 if q_probs is None else float(q_probs[n])
+        if rng.uniform() < p[draft[n]] / max(q, 1e-20):
+            n += 1
+            continue
+        # rejected: resample from the residual max(p - q, 0) renormalized.
+        # For a one-hot proposal this is p with the draft token zeroed.
+        res = p.copy()
+        if q_probs is None:
+            res[draft[n]] = 0.0
+        else:
+            res[draft[n]] = max(res[draft[n]] - q, 0.0)
+        s = res.sum()
+        if s <= 0.0:          # proposal == target mass; degenerate residual
+            return n, int(draft[n])
+        return n, int(rng.choice(res.size, p=res / s))
+    p = target_probs(rows[k], temperature=temperature, top_k=top_k)
+    return k, int(rng.choice(p.size, p=p))

@@ -146,7 +146,8 @@ class ContinuousBatchingScheduler:
         return [self.running[s] for s in sorted(self.running)]
 
     def plan_chunks(self, demands: Sequence[tuple],
-                    chunk_size: int) -> Dict[int, int]:
+                    chunk_size: int,
+                    draft_wants: Optional[Dict[int, int]] = None):
         """Split one unified step's token budget across the active requests.
 
         ``demands``: ``(request, n_remaining)`` pairs — how many feed tokens
@@ -159,6 +160,16 @@ class ContinuousBatchingScheduler:
         beyond the first, up to ``chunk_size`` per request) draws from
         ``chunk_budget``, handed out FCFS by admission order so an early
         long prompt still finishes before a later one accelerates.
+
+        ``draft_wants`` (rid -> K) adds the speculative-decoding demand:
+        how many *draft* rows each steady-state request would like to score
+        this step. Draft rows ride the SAME ``chunk_budget`` as prompt
+        surplus but rank strictly *after* it (prompt chunks are what queued
+        admissions are waiting on — speculation must never starve decodes
+        or admissions, only spend leftover budget), FCFS by admission order,
+        capped at ``chunk_size - 1`` per slot (the scored chunk is the
+        pending token plus the drafts). When given, returns
+        ``(grants, draft_grants)``.
         """
         grants = {req.rid: min(1, rem) for req, rem in demands}
         budget = self.chunk_budget
@@ -170,4 +181,17 @@ class ContinuousBatchingScheduler:
                 extra = min(extra, budget)
                 budget -= extra
             grants[req.rid] += extra
-        return grants
+        if draft_wants is None:
+            return grants
+        draft_grants: Dict[int, int] = {}
+        for req, rem in sorted(demands, key=lambda d: d[0].admit_order):
+            want = min(draft_wants.get(req.rid, 0),
+                       chunk_size - grants[req.rid])
+            if want <= 0 or rem > 1:
+                draft_grants[req.rid] = 0
+                continue       # drafts extend steady-state decodes only
+            if budget is not None:
+                want = min(want, budget)
+                budget -= want
+            draft_grants[req.rid] = want
+        return grants, draft_grants

@@ -1,0 +1,446 @@
+"""Speculative decoding: the propose→score→accept serve contract (ISSUE 5).
+
+The acceptance bar: greedy speculative decoding is **token-identical** to
+the non-speculative engine on both paged backends (the parity oracle),
+rejection sampling preserves the target distribution, rejected draft rows
+roll back from the paged KV blocks with checksum-verified truncation (the
+anti-laundering guard), and SEU campaigns striking the *draft* pass, the
+*target* pass, and *mid-rollback* all finish detect→repair→token-identical
+with zero silent corruptions.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serve.sampling import speculative_accept, target_probs
+from repro.serve.scheduler import ContinuousBatchingScheduler, Request
+
+
+# ---------------------------------------------------------------------------
+# acceptance stage (pure numpy, no jax)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.quick
+def test_speculative_accept_greedy_is_exact_argmax():
+    rows = np.array([[0.0, 3.0, 1.0],     # argmax 1
+                     [5.0, 0.0, 1.0],     # argmax 0
+                     [0.0, 1.0, 9.0]])    # argmax 2
+    # drafts match rows 0 and 1 -> both accepted, bonus from row 2
+    a, nxt = speculative_accept(rows, [1, 0], temperature=0.0, top_k=0)
+    assert (a, nxt) == (2, 2)
+    # first draft wrong -> zero accepted, resample = row-0 argmax
+    a, nxt = speculative_accept(rows, [2, 0], temperature=0.0, top_k=0)
+    assert (a, nxt) == (0, 1)
+    # second draft wrong -> one accepted, next = row-1 argmax
+    a, nxt = speculative_accept(rows, [1, 2], temperature=0.0, top_k=0)
+    assert (a, nxt) == (1, 0)
+    # K = 0 degenerates to plain greedy decode
+    a, nxt = speculative_accept(rows[:1], [], temperature=0.0, top_k=0)
+    assert (a, nxt) == (0, 1)
+
+
+@pytest.mark.quick
+def test_rejection_sampling_preserves_target_distribution():
+    """The statistical guarantee speculation rests on: committed tokens are
+    distributed exactly as non-speculative samples from the target,
+    whatever the proposal. Marginal of (accept draft x, else resample from
+    the residual) must equal the target softmax."""
+    rng = np.random.default_rng(0)
+    logits = np.array([1.2, -0.4, 0.7, 2.1, 0.0], np.float32)
+    temperature, top_k = 0.9, 0
+    p = target_probs(logits, temperature=temperature, top_k=top_k)
+    n = 20000
+    for draft_tok in (3, 1):            # a likely and an unlikely proposal
+        counts = np.zeros(5)
+        accepted = 0
+        for _ in range(n):
+            a, nxt = speculative_accept(
+                logits[None].repeat(2, axis=0), [draft_tok],
+                temperature=temperature, top_k=top_k, rng=rng)
+            tok = draft_tok if a == 1 else nxt
+            counts[tok] += 1
+            accepted += a
+        emp = counts / n
+        np.testing.assert_allclose(emp, p, atol=0.015), (emp, p)
+        # acceptance probability of a one-hot proposal is p(draft)
+        assert abs(accepted / n - p[draft_tok]) < 0.015
+
+
+@pytest.mark.quick
+def test_rejection_sampling_respects_top_k():
+    rng = np.random.default_rng(1)
+    logits = np.array([3.0, 2.0, 1.0, 0.0], np.float32)
+    for _ in range(300):
+        a, nxt = speculative_accept(
+            logits[None].repeat(2, axis=0), [3],   # draft outside top-2
+            temperature=1.0, top_k=2, rng=rng)
+        tok = 3 if a == 1 else nxt
+        assert tok in (0, 1)            # top-2 truncation: 2/3 impossible
+        assert a == 0                   # p(draft)=0 -> always rejected
+
+
+# ---------------------------------------------------------------------------
+# scheduler: draft budgeting (no jax)
+# ---------------------------------------------------------------------------
+
+def _req(rid, admit_order, max_new=100):
+    r = Request(rid=rid, prompt=np.asarray([1], np.int32),
+                max_new_tokens=max_new)
+    r.admit_order = admit_order
+    return r
+
+
+@pytest.mark.quick
+def test_plan_chunks_budgets_drafts_after_prompt_surplus():
+    sched = ContinuousBatchingScheduler(4, chunk_budget=6)
+    a, b, c = _req(0, 0), _req(1, 1), _req(2, 2)
+    # a decodes and wants 4 drafts; b is mid-prefill (owes 30); c decodes
+    # and wants 4 drafts. Prompt surplus outranks drafts: b drains the
+    # budget first, then a (earlier admission) gets the leftover.
+    grants, drafts = sched.plan_chunks(
+        [(a, 1), (b, 30), (c, 1)], chunk_size=8,
+        draft_wants={a.rid: 4, c.rid: 4})
+    assert grants == {a.rid: 1, b.rid: 1 + 6, c.rid: 1}
+    assert drafts == {a.rid: 0, b.rid: 0, c.rid: 0}
+    # no prefill pressure: drafts spend the budget FCFS
+    grants, drafts = sched.plan_chunks(
+        [(a, 1), (c, 1)], chunk_size=8, draft_wants={a.rid: 4, c.rid: 4})
+    assert grants == {a.rid: 1, c.rid: 1}
+    assert drafts == {a.rid: 4, c.rid: 2}
+    # unbounded budget: everyone drafts up to chunk_size - 1
+    sched.chunk_budget = None
+    _, drafts = sched.plan_chunks(
+        [(a, 1), (c, 1)], chunk_size=4, draft_wants={a.rid: 9, c.rid: 2})
+    assert drafts == {a.rid: 3, c.rid: 2}
+    # a mid-prefill request never drafts, whatever it asks for
+    _, drafts = sched.plan_chunks(
+        [(b, 12)], chunk_size=8, draft_wants={b.rid: 4})
+    assert drafts == {b.rid: 0}
+
+
+# ---------------------------------------------------------------------------
+# n-gram proposer (no jax)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.quick
+def test_ngram_proposer_prompt_lookup():
+    from repro.serve.draft import NGramProposer
+    prop = NGramProposer(max_ngram=3, min_ngram=1)
+    # tail bigram (7, 8) occurred earlier, followed by 9, 4
+    toks = np.asarray([7, 8, 9, 4, 5, 7, 8], np.int32)
+    np.testing.assert_array_equal(prop.propose(0, toks, 2), [9, 4])
+    # rightmost match wins: the later (1, 2) -> 6 beats the earlier -> 3
+    toks = np.asarray([1, 2, 3, 1, 2, 6, 0, 1, 2], np.int32)
+    np.testing.assert_array_equal(prop.propose(0, toks, 1), [6])
+    # no earlier occurrence of the tail token -> empty (K = 0 path)
+    assert prop.propose(0, np.asarray([1, 2, 3], np.int32), 4).size == 0
+    assert prop.propose(0, np.asarray([1, 2, 1], np.int32), 0).size == 0
+
+
+# ---------------------------------------------------------------------------
+# engine level (jax; gpt2-smoke)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("gpt2-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cold_params = model.init(jax.random.PRNGKey(7))
+    rng = np.random.default_rng(0)
+    # ragged batch mixing repetitive prompts (the ngram proposer's regime)
+    # with random ones (mostly-rejected proposals), more requests than slots
+    prompts = []
+    for i, t in enumerate((6, 17, 21, 9, 26)):
+        if i % 2 == 0:
+            pat = rng.integers(0, cfg.vocab_size, (3,)).astype(np.int32)
+            prompts.append(np.tile(pat, -(-t // 3))[:t])
+        else:
+            prompts.append(rng.integers(0, cfg.vocab_size,
+                                        (t,)).astype(np.int32))
+    return cfg, model, params, cold_params, prompts
+
+
+def _paged(model, params, **kw):
+    from repro.serve import PagedServeEngine
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("cache_len", 64)
+    kw.setdefault("block_size", 16)
+    kw.setdefault("chunk_size", 16)
+    return PagedServeEngine(model, params, **kw)
+
+
+def _run(eng, prompts, gen=8, **submit_kw):
+    rids = [eng.submit(p, max_new_tokens=gen, **submit_kw) for p in prompts]
+    outs = eng.run()
+    return [list(outs[r]) for r in rids]
+
+
+def test_greedy_speculative_parity_matrix(setup):
+    """The parity oracle: greedy speculative decoding must be token-
+    identical to the non-speculative engine across both backends x
+    K in {1, 2, 4} x a ragged repetitive/random batch — acceptances,
+    rejections and KV rollbacks included."""
+    cfg, model, params, _, prompts = setup
+    ref = _run(_paged(model, params), prompts)
+    for kernel in ("gather", "fused"):
+        for k in (1, 2, 4):
+            eng = _paged(model, params, kernel=kernel, speculate="ngram",
+                         draft_len=k)
+            got = _run(eng, prompts)
+            assert got == ref, f"kernel={kernel} K={k}"
+            ps = eng.paged_stats
+            assert ps.spec_proposed_tokens > 0, \
+                f"kernel={kernel} K={k} never speculated"
+            if k > 1:
+                assert ps.spec_rolled_back_rows > 0, \
+                    f"kernel={kernel} K={k} never rolled back"
+            assert ps.kv_detected_blocks == 0     # no false positives
+
+
+def test_draft_model_parity_and_acceptance(setup):
+    """Draft-model proposer through the EFTA path: a self-draft (draft ==
+    target) accepts ~every token and cuts the step count; a cold draft
+    rejects ~everything; both are token-identical to the baseline."""
+    cfg, model, params, cold_params, prompts = setup
+    base = _paged(model, params, kernel="fused")
+    ref = _run(base, prompts[:3])
+    for kernel in ("gather", "fused"):
+        eng = _paged(model, params, kernel=kernel, speculate="draft",
+                     draft_len=4, draft_model=model, draft_params=params)
+        assert _run(eng, prompts[:3]) == ref, kernel
+        assert eng.acceptance_rate > 0.9
+        if kernel == "fused":
+            assert eng.stats.steps < base.stats.steps   # fewer launches
+        st = eng.telemetry.requests[0]
+        assert st.draft_proposed > 0
+        assert st.acceptance_rate > 0.5
+    eng = _paged(model, params, kernel="fused", speculate="draft",
+                 draft_len=4, draft_model=model, draft_params=cold_params)
+    assert _run(eng, prompts[:3]) == ref
+    assert eng.acceptance_rate < 0.5
+    assert eng.paged_stats.spec_rolled_back_rows > 0
+
+
+def test_speculation_respects_chunk_budget(setup):
+    """Satellite: draft rows spend only leftover chunk budget — a decoding
+    request keeps its token/step while a long prompt prefills, and the
+    admission is not starved by speculation."""
+    cfg, model, params, _, _ = setup
+    rng = np.random.default_rng(3)
+    pat = rng.integers(0, cfg.vocab_size, (3,)).astype(np.int32)
+    short = np.tile(pat, 3)
+    long_p = rng.integers(0, cfg.vocab_size, (40,)).astype(np.int32)
+    eng = _paged(model, params, kernel="fused", speculate="ngram",
+                 draft_len=4, chunk_budget=4, cache_len=96)
+    r_short = eng.submit(short, max_new_tokens=6)
+    eng.step()
+    r_long = eng.submit(long_p, max_new_tokens=2)
+    short_req = next(r for r in eng.scheduler.active_rows()
+                     if r.rid == r_short)
+    gen_trace = []
+    while not short_req.is_done():
+        eng.step()
+        gen_trace.append(short_req.num_generated)
+    # the decode advanced every step (speculation may add more per step,
+    # never fewer), and the long prompt is still mid-prefill
+    assert all(b > a for a, b in zip(gen_trace, gen_trace[1:]))
+    long_req = next((r for r in eng.scheduler.active_rows()
+                     if r.rid == r_long), None)
+    assert long_req is not None and long_req.num_generated == 0
+    eng.run()
+
+    # parity for the same pair without a budget
+    ref_eng = _paged(model, params, kernel="fused", cache_len=96)
+    ra = ref_eng.submit(short, max_new_tokens=6)
+    rb = ref_eng.submit(long_p, max_new_tokens=2)
+    ref = ref_eng.run()
+    spec_eng = _paged(model, params, kernel="fused", speculate="ngram",
+                      draft_len=4, cache_len=96)
+    sa = spec_eng.submit(short, max_new_tokens=6)
+    sb = spec_eng.submit(long_p, max_new_tokens=2)
+    got = spec_eng.run()
+    assert list(got[sa]) == list(ref[ra])
+    assert list(got[sb]) == list(ref[rb])
+
+
+# ---------------------------------------------------------------------------
+# fault campaigns: draft pass, target pass, mid-rollback
+# ---------------------------------------------------------------------------
+
+def test_target_pass_seu_during_speculation(setup):
+    """A detect-mode compute SEU striking the scoring (target) pass of a
+    speculative step: detected by EFTA, the step retries clean, tokens are
+    identical to the clean run — and the new telemetry split shows
+    'detected once, then retried clean' (redetected == 0)."""
+    import jax
+    from repro.core import FaultSpec, Site
+    from repro.models import build_model
+    from repro.serve import batch_faults
+    cfg, _, _, _, prompts = setup
+    det_cfg = dataclasses.replace(
+        cfg, ft=dataclasses.replace(cfg.ft, mode="detect"))
+    model = build_model(det_cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    spec_kw = dict(speculate="draft", draft_len=3, draft_model=model,
+                   draft_params=params)
+
+    for kernel in ("gather", "fused"):
+        clean = _paged(model, params, kernel=kernel, **spec_kw)
+        ref = _run(clean, prompts[:2], gen=6)
+        eng = _paged(model, params, kernel=kernel, **spec_kw)
+        f = FaultSpec.single(Site.GEMM2, block=0, batch=0, head=1, row=0,
+                             col=3, bit=28)
+        rids = [eng.submit(p, max_new_tokens=6) for p in prompts[:2]]
+        # strike several early steps: the gather backend speculates from
+        # step 0 (and, at acceptance ~1, drains in ~2 steps); the fused
+        # backend prefills through steps 0-1 and speculates from step 2 —
+        # either way at least one injection lands on a speculative scoring
+        # pass, and every injection must be detected and retried clean
+        faults = {i: batch_faults(2, {0: f, 1: f}) for i in (0, 1, 2)}
+        outs = eng.run(faults_by_step=faults)
+        assert [list(outs[r]) for r in rids] == ref, kernel
+        assert eng.stats.retries >= 1
+        hit = [st for st in eng.telemetry.requests.values()
+               if sum(st.detected[:5])]
+        assert hit, "SEU was not detected"
+        for st in hit:
+            # detected once, retried clean: the retry re-detected nothing
+            assert sum(st.redetected) == 0
+            assert st.retries >= 1
+
+
+def test_draft_pass_seu_detected_and_harmless(setup):
+    """A detect-mode SEU striking the *draft model's* forward: the draft
+    pass's own EFTA scheme detects it, the proposal attempt retries clean,
+    and the committed tokens are identical — a flipped bit in the draft
+    pass can only ever cost a rejected draft, never a wrong token."""
+    import jax
+    from repro.core import FaultSpec, Site
+    from repro.models import build_model
+    cfg, _, _, _, prompts = setup
+    det_cfg = dataclasses.replace(
+        cfg, ft=dataclasses.replace(cfg.ft, mode="detect"))
+    model = build_model(det_cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    spec_kw = dict(speculate="draft", draft_len=3, draft_model=model,
+                   draft_params=params)
+
+    clean = _paged(model, params, kernel="fused", **spec_kw)
+    ref = _run(clean, prompts[:2], gen=6)
+
+    eng = _paged(model, params, kernel="fused", **spec_kw)
+    rids = [eng.submit(p, max_new_tokens=6) for p in prompts[:2]]
+    struck = {"n": 0}
+    orig_step = eng.step
+
+    def step_with_draft_fault(faults=None):
+        if eng.stats.steps == 2 and not struck["n"]:
+            eng._proposer.fault_next = FaultSpec.single(
+                Site.GEMM1, block=0, batch=0, head=1, row=0, col=2, bit=28)
+            struck["n"] += 1
+        return orig_step(faults)
+
+    eng.step = step_with_draft_fault
+    while eng.scheduler.has_work:
+        eng.step()
+    outs = {r.rid: list(r.generated) for r in eng.scheduler.finished}
+    assert [outs[r] for r in rids] == ref
+    assert struck["n"] == 1
+    draft_stats = eng._proposer.stats
+    assert draft_stats.detected >= 1
+    assert draft_stats.retries >= 1
+    hit = [st for st in eng.telemetry.requests.values()
+           if sum(st.draft_detected[:5])]
+    assert hit, "draft-pass SEU not recorded in per-request telemetry"
+    assert all(st.draft_retries >= 1 for st in hit)
+
+
+@pytest.mark.parametrize("kernel", ["gather", "fused"])
+def test_mid_rollback_corruption_is_never_laundered(setup, kernel):
+    """The anti-laundering guard: a resident bit flip landing between the
+    scoring step's verify and the KV rollback's checksum re-stamp must be
+    caught by the rollback's pre-restamp verification, repaired by block
+    re-prefill, and leave the final tokens identical — re-stamping from
+    corrupted content would have made it permanently silent."""
+    cfg, model, params, cold_params, prompts = setup
+    # cold draft model: every proposal is rejected -> every spec step
+    # rolls back, so the hook's strike always lands mid-rollback
+    spec_kw = dict(speculate="draft", draft_len=4, draft_model=model,
+                   draft_params=cold_params)
+    ref = _run(_paged(model, params, kernel=kernel), [prompts[1]])
+
+    eng = _paged(model, params, kernel=kernel, **spec_kw)
+    fired = {"n": 0}
+
+    def strike(e):
+        if fired["n"]:
+            return
+        req = [r for r in e.scheduler.active_rows() if not r.is_done()][0]
+        pos = int(e._pos[req.slot])          # already rewound to keep_pos
+        j = pos // e.block_size
+        if j < len(req.block_ids) and pos % e.block_size > 0:
+            e.inject_kv_fault(layer=0, block=req.block_ids[j], head=0,
+                              row=(pos % e.block_size) - 1, col=2, bit=27,
+                              into="k")
+            fired["n"] += 1
+
+    eng._pre_rollback_hook = strike
+    got = _run(eng, [prompts[1]])
+    assert got == ref
+    assert fired["n"] == 1
+    assert eng.paged_stats.rollback_detected_blocks >= 1
+    assert eng.paged_stats.kv_repaired_blocks >= 1
+
+
+def test_resident_kv_seu_during_speculation(setup):
+    """Site.KV resident-state flips striking live blocks while the engine
+    speculates: detected at read time by the scoring step's verification,
+    repaired by block re-prefill, token-identical — zero silent
+    corruptions through the speculative path."""
+    cfg, model, params, _, prompts = setup
+    for kernel in ("gather", "fused"):
+        spec_kw = dict(speculate="draft", draft_len=3, draft_model=model,
+                       draft_params=params)
+        ref = _run(_paged(model, params, kernel=kernel, **spec_kw),
+                   [prompts[1]], gen=16)
+        eng = _paged(model, params, kernel=kernel, **spec_kw)
+        rid = eng.submit(prompts[1], max_new_tokens=16)
+        eng.step()
+        eng.step()
+        req = next(r for r in eng.scheduler.active_rows())
+        assert not req.is_done()        # corruption must still be read
+        eng.inject_kv_fault(layer=1, block=req.block_ids[0], head=0, row=3,
+                            col=5, bit=27, into="v")
+        outs = eng.run()
+        assert list(outs[rid]) == ref[0], kernel
+        assert eng.paged_stats.kv_detected_blocks >= 1
+        assert eng.paged_stats.kv_repaired_blocks >= 1
+
+
+@pytest.mark.quick
+def test_speculative_quick_smoke(setup):
+    """Quick-tier guard: speculation on the fused backend stays token-
+    identical to the baseline with the engine still at <= 2 compiled step
+    programs; the self-draft proposer commits accepted drafts (acceptance
+    ~1 by construction), the ngram proposer survives rejections."""
+    cfg, model, params, _, prompts = setup
+    ref = _run(_paged(model, params, kernel="fused"), [prompts[0]])
+    eng = _paged(model, params, kernel="fused", speculate="ngram",
+                 draft_len=3)
+    got = _run(eng, [prompts[0]])
+    assert got == ref
+    assert eng.paged_stats.spec_proposed_tokens > 0
+    assert eng._step_fused._cache_size() <= 2
+    eng = _paged(model, params, kernel="fused", speculate="draft",
+                 draft_len=3, draft_model=model, draft_params=params)
+    got = _run(eng, [prompts[0]])
+    assert got == ref
+    assert eng.paged_stats.spec_accepted_tokens > 0
+    assert eng.acceptance_rate > 0.9
+    assert eng._step_fused._cache_size() <= 2

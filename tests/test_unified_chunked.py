@@ -297,6 +297,50 @@ def test_scrub_bounds_stamped_deferred_detection(setup):
     assert eng.paged_stats.kv_repaired_blocks >= 1
 
 
+def test_scrub_covers_parked_prefix_blocks(setup):
+    """Satellite (ISSUE 5): the background scrub draws from *parked*
+    prefix-cache blocks after the live tables. A bit flip landing in a
+    shared-prefix block while it sits parked (ref == 0 — in no live table,
+    so read-time verification never reaches it) is caught by the next scrub
+    pass, the poisoned cache entry is discarded, and the next admission of
+    the same prefix takes a clean miss instead of gathering corruption."""
+    cfg, model, params, rng = setup
+    shared = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+    tail = rng.integers(0, cfg.vocab_size, (4,)).astype(np.int32)
+    prompt = np.concatenate([shared, tail])
+
+    eng = _paged(model, params, cache_len=64, num_blocks=16,
+                 kv_verify="stamped", scrub_interval=1, scrub_batch=2)
+    eng.submit(prompt, max_new_tokens=2)
+    eng.run()                                    # finish -> blocks park
+    parked = eng.pool.blocks.parked_blocks()
+    assert parked, "finished request's registered blocks should park"
+    eng.inject_kv_fault(layer=0, block=parked[0], head=0, row=3, col=1,
+                        bit=27, into="k")
+    det0 = eng.paged_stats.kv_detected_blocks
+    # an unrelated long-running request drives steps (and scrub passes)
+    # while the poisoned block stays parked — no admission touches it
+    eng.submit(rng.integers(0, cfg.vocab_size, (4,)).astype(np.int32),
+               max_new_tokens=6)
+    steps = 0
+    while eng.scheduler.has_work and \
+            eng.paged_stats.kv_detected_blocks == det0:
+        eng.step()
+        steps += 1
+        assert steps < 20, "scrub never reached the parked block"
+    assert eng.paged_stats.kv_detected_blocks == det0 + 1
+    assert parked[0] not in eng.pool.blocks.parked_blocks()
+    eng.run()
+
+    # the same shared prefix admits cleanly (cache miss, fresh prefill) and
+    # is token-identical to an uncorrupted engine
+    r2 = eng.submit(prompt, max_new_tokens=2)
+    out = eng.run()[r2]
+    ref_eng = _paged(model, params, cache_len=64, num_blocks=16)
+    rr = ref_eng.submit(prompt, max_new_tokens=2)
+    np.testing.assert_array_equal(out, ref_eng.run()[rr])
+
+
 @pytest.mark.quick
 def test_unified_quick_smoke(setup):
     """Quick-tier guard: one mixed batch (a prefilling prompt + a decoding
